@@ -1,0 +1,79 @@
+"""Shared benchmark helpers: trace-driven workflow runs, percentiles, CSV.
+
+All latencies are in ms on the LinkSim clock (timing model documented in
+DESIGN.md §2: link bandwidths + pin/alloc/IPC costs calibrated to the
+paper's measurements; policies and chunk schedules are the real system).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.api import TubeConfig
+from repro.serving.executor import WorkflowEngine
+from repro.serving.workflow import WORKFLOWS, Workflow, isolated_compute_ms
+from benchmarks.workloads import arrivals
+
+ROWS: list[tuple] = []
+
+
+def emit(bench: str, name: str, value, unit: str, note: str = ""):
+    ROWS.append((bench, name, round(value, 3) if isinstance(value, float)
+                 else value, unit, note))
+    print(f"{bench},{name},{value if not isinstance(value, float) else round(value, 3)},{unit},{note}")
+
+
+def p99(xs) -> float:
+    return float(np.percentile(np.asarray(xs), 99)) if len(xs) else 0.0
+
+
+def lat_ms(rs) -> float:
+    return rs.t_done - rs.t_arrive
+
+
+def exec_ms(rs) -> float:
+    """Execution latency excluding queueing: data passing + compute."""
+    return rs.h2g_ms + rs.g2g_ms + rs.compute_ms
+
+
+def run_trace(topo_fn, cfg: TubeConfig, w: Workflow, *, pattern: str = "bursty",
+              n: int = 32, scale_ms: float = 60.0, seed: int = 0,
+              slo_factor: float = 0.0) -> WorkflowEngine:
+    """Drive one workflow with an Azure-style arrival trace."""
+    eng = WorkflowEngine(topo_fn(), cfg)
+    for t in arrivals(pattern, n, scale_ms, seed):
+        eng.submit_workflow(w, t, slo_factor=slo_factor)
+    eng.run()
+    return eng
+
+
+def run_mixed(topo_fn, cfg: TubeConfig, specs, *, n: int = 24,
+              scale_ms: float = 60.0, seed: int = 0) -> WorkflowEngine:
+    """Drive several workflows concurrently on one server.
+
+    specs: [(workflow, pattern, slo_factor), ...] — each gets its own
+    arrival trace (different seed) but they share the server's links,
+    the contention case of paper Fig. 5(a)/Fig. 14.
+    """
+    eng = WorkflowEngine(topo_fn(), cfg)
+    for i, (w, pattern, slo_factor) in enumerate(specs):
+        for t in arrivals(pattern, n, scale_ms, seed + i):
+            eng.submit_workflow(w, t, slo_factor=slo_factor)
+    eng.run()
+    return eng
+
+
+def max_throughput(topo_fn, cfg: TubeConfig, w: Workflow, *,
+                   n: int = 48) -> float:
+    """Requests/s under infinite demand (all submitted at t=0)."""
+    eng = WorkflowEngine(topo_fn(), cfg)
+    for _ in range(n):
+        eng.submit_workflow(w, 0.0)
+    eng.run()
+    assert len(eng.completed) == n, (cfg.name, w.name, len(eng.completed))
+    makespan = max(r.t_done for r in eng.completed)
+    return n / makespan * 1000.0
+
+
+def p99_exec(topo_fn, cfg, w, **kw) -> float:
+    eng = run_trace(topo_fn, cfg, w, **kw)
+    return p99([exec_ms(r) for r in eng.completed])

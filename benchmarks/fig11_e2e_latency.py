@@ -1,0 +1,40 @@
+"""Fig. 11 — end-to-end P99 latency: 4 systems x 6 workflows x 2 servers.
+
+Paper bands: FaaSTube reduces e2e latency 86-90% vs INFless+, 62-79% vs
+DeepPlan+, 43-63% vs FaaSTube* (across workloads / servers).
+"""
+from __future__ import annotations
+
+from repro.core.api import SYSTEMS
+from repro.core.topology import dgx_a100, dgx_v100
+from repro.serving.workflow import WORKFLOWS
+from benchmarks.common import emit, lat_ms, p99, run_trace
+from benchmarks.workloads import PATTERNS
+
+
+def main():
+    reductions = {"infless+": [], "deepplan+": [], "faastube*": []}
+    for server, topo in (("v100", dgx_v100), ("a100", dgx_a100)):
+        for wname in sorted(WORKFLOWS):
+            for pattern in PATTERNS:
+                lat = {}
+                for sname, cfg in SYSTEMS.items():
+                    eng = run_trace(topo, cfg, WORKFLOWS[wname],
+                                    pattern=pattern, n=24)
+                    lat[sname] = p99([lat_ms(r) for r in eng.completed])
+                for base in reductions:
+                    reductions[base].append(1 - lat["faastube"] / lat[base])
+                if pattern == "bursty":
+                    emit("fig11", f"{server}.{wname}.p99",
+                         lat["faastube"], "ms",
+                         " ".join(f"{s}={lat[s]:.0f}" for s in
+                                  ("infless+", "deepplan+", "faastube*")))
+    for base, rs in reductions.items():
+        emit("fig11", f"reduction_vs_{base}.max", 100 * max(rs), "%",
+             f"min={100 * min(rs):.0f}%")
+    assert max(reductions["infless+"]) >= 0.80, "expected ~86-90% max reduction"
+    return reductions
+
+
+if __name__ == "__main__":
+    main()

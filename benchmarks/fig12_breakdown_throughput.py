@@ -1,0 +1,50 @@
+"""Fig. 12 — (a) execution-latency breakdown (excl. queueing) under bursty
+load; (b) maximum sustainable throughput.
+
+Paper bands: FaaSTube cuts data-passing overhead 93-98% vs INFless+,
+90-94% vs DeepPlan+, 70-88% vs FaaSTube*; throughput 2.4-12x vs INFless+,
+1.7-3.9x vs DeepPlan+, 1.3-2.7x vs FaaSTube* (largest on driving/video).
+"""
+from __future__ import annotations
+
+from repro.core.api import SYSTEMS
+from repro.core.topology import dgx_v100
+from repro.serving.workflow import WORKFLOWS
+from benchmarks.common import emit, max_throughput, p99, run_trace
+
+
+def passing_ms(eng) -> float:
+    return p99([r.h2g_ms + r.g2g_ms for r in eng.completed])
+
+
+def main():
+    pass_red = {"infless+": [], "deepplan+": [], "faastube*": []}
+    tput_ratio = {"infless+": [], "deepplan+": [], "faastube*": []}
+    for wname in sorted(WORKFLOWS):
+        w = WORKFLOWS[wname]
+        pas, tput = {}, {}
+        for sname, cfg in SYSTEMS.items():
+            eng = run_trace(dgx_v100, cfg, w, pattern="bursty", n=24)
+            pas[sname] = passing_ms(eng)
+            tput[sname] = max_throughput(dgx_v100, cfg, w)
+        for base in pass_red:
+            if pas[base] > 0:
+                pass_red[base].append(1 - pas["faastube"] / pas[base])
+            tput_ratio[base].append(tput["faastube"] / tput[base])
+        emit("fig12", f"{wname}.passing_p99", pas["faastube"], "ms",
+             " ".join(f"{s}={pas[s]:.1f}" for s in pas))
+        emit("fig12", f"{wname}.tput", tput["faastube"], "req/s",
+             " ".join(f"{s}={tput[s]:.1f}" for s in tput))
+    for base in pass_red:
+        emit("fig12", f"passing_reduction_vs_{base}.max",
+             100 * max(pass_red[base]), "%",
+             f"min={100 * min(pass_red[base]):.0f}%")
+        emit("fig12", f"tput_ratio_vs_{base}.max", max(tput_ratio[base]), "x",
+             f"min={min(tput_ratio[base]):.2f}x")
+    assert max(tput_ratio["infless+"]) >= 2.4, "expected >=2.4x tput gain"
+    assert max(pass_red["infless+"]) >= 0.90, "expected >=90% passing cut"
+    return pass_red, tput_ratio
+
+
+if __name__ == "__main__":
+    main()

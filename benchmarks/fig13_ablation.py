@@ -1,0 +1,60 @@
+"""Fig. 13 — ablation: enable UI / PS / NS / ES one at a time on top of
+FaaSTube* (all connections used, no further optimizations).
+
+Paper (server 1, V100): UI <=2.5%, PS <=20%, NS <=23%, ES <=19%; total
+46-65% below FaaSTube*.  Server 2 (A100/NVSwitch): NS ~0% (uniform
+topology), PS <=30%, ES <=39%; total 57-72%.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.api import FAASTUBE_STAR
+from repro.core.topology import dgx_a100, dgx_v100
+from repro.serving.workflow import WORKFLOWS
+from benchmarks.common import emit, exec_ms, p99, run_trace
+
+STEPS = (
+    ("faastube*", {}),
+    ("+UI", {"unified_index": True}),
+    ("+PS", {"slo_sched": True, "pinned": "circular"}),
+    ("+NS", {"g2g": "multipath"}),
+    ("+ES", {"pool": "elastic", "migration": "queue"}),
+)
+
+
+def ladder():
+    """Cumulative TubeConfigs for the ablation ladder."""
+    cfgs, acc = [], dataclasses.replace(FAASTUBE_STAR, unified_index=False)
+    for name, kw in STEPS:
+        acc = dataclasses.replace(acc, **kw)
+        cfgs.append((name, acc))
+    return cfgs
+
+
+def main():
+    out = {}
+    for server, topo in (("v100", dgx_v100), ("a100", dgx_a100)):
+        worst_total = 0.0
+        for wname in ("traffic", "driving", "video", "image"):
+            w = WORKFLOWS[wname]
+            lats = []
+            for name, cfg in ladder():
+                eng = run_trace(topo, cfg, w, pattern="bursty", n=24)
+                lats.append(p99([exec_ms(r) for r in eng.completed]))
+            base = lats[0]
+            steps = {STEPS[i][0]: 100 * (lats[i - 1] - lats[i]) / base
+                     for i in range(1, len(lats))}
+            total = 100 * (base - lats[-1]) / base
+            worst_total = max(worst_total, total)
+            emit("fig13", f"{server}.{wname}.total_reduction", total, "%",
+                 " ".join(f"{k}={v:.1f}%" for k, v in steps.items()))
+            out[(server, wname)] = (steps, total)
+        emit("fig13", f"{server}.max_total_reduction", worst_total, "%",
+             "paper: 46-65% (v100) / 57-72% (a100)")
+    assert max(t for _, t in out.values()) >= 40.0
+    return out
+
+
+if __name__ == "__main__":
+    main()

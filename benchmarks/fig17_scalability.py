@@ -1,0 +1,96 @@
+"""Fig. 17 — (a) 4-node cluster: FaasFlow-style scheduling leaves at most
+one inter-node edge per workflow; FaaSTube pipelines gpu->host->net->host->
+gpu, baselines copy sequentially.  Paper: -85% vs INFless+, -63% vs
+DeepPlan+, -39% vs FaaSTube*.
+
+(b) 4xA10 server (no NVLink): single PCIe link per GPU, so INFless+ ==
+DeepPlan+; FaaSTube still wins by pipelining P2P-over-PCIe + pool/pinned
+management.  Paper: -90% / -90% / -75%.
+"""
+from __future__ import annotations
+
+from repro.core.api import SYSTEMS
+from repro.core.topology import a10_server, cluster
+from repro.serving.executor import WorkflowEngine
+from repro.serving.workflow import WORKFLOWS, place
+from benchmarks.common import emit, lat_ms, p99
+from benchmarks.workloads import arrivals
+
+
+def cross_node_placement(w, topo):
+    """FaasFlow-style: whole workflow on n0 except the last gpu stage,
+    which lands on n1 (exactly one inter-node edge)."""
+    gpu_stages = [s for s in w.stages if s.kind == "gpu"]
+    sub0 = [g for g in topo.gpus if g.startswith("n0:")]
+    pl = {}
+    for i, s in enumerate(gpu_stages[:-1]):
+        pl[s.name] = sub0[i % len(sub0)]
+    pl[gpu_stages[-1].name] = next(g for g in topo.gpus if g.startswith("n1:"))
+    return pl
+
+
+def run_cluster(cfg, w, n=16):
+    topo = cluster(4)
+    eng = WorkflowEngine(topo, cfg,
+                         placements={w.name: cross_node_placement(w, topo)})
+    for t in arrivals("bursty", n, 60.0, 0):
+        eng.submit_workflow(w, t)
+    eng.run()
+    return p99([lat_ms(r) for r in eng.completed])
+
+
+def main():
+    # (a) inter-node
+    reds = {}
+    for wname in ("driving", "video"):
+        w = WORKFLOWS[wname]
+        lat = {s: run_cluster(cfg, w) for s, cfg in SYSTEMS.items()}
+        for base in ("infless+", "deepplan+", "faastube*"):
+            reds.setdefault(base, []).append(1 - lat["faastube"] / lat[base])
+        emit("fig17", f"cluster.{wname}.p99", lat["faastube"], "ms",
+             " ".join(f"{s}={lat[s]:.0f}" for s in lat))
+    for base, rs in reds.items():
+        emit("fig17", f"cluster.reduction_vs_{base}", 100 * max(rs), "%",
+             "paper: 85/63/39%")
+
+    # (b) 4xA10, no NVLink.  Paper: INFless+ == DeepPlan+ there because
+    # DeepPlan's parallel-PCIe advantage vanishes (one link per GPU).  Our
+    # INFless+ transfers unpinned while DeepPlan+ pins per transfer, so
+    # absolute latencies differ; the paper's property we assert is that
+    # DeepPlan's parallel advantage is GONE on A10 while present on V100.
+    import dataclasses
+    from benchmarks.common import run_trace
+    from repro.core.api import DEEPPLAN
+    from repro.core.topology import dgx_v100
+    lat_a10 = {}
+    for sname, cfg in SYSTEMS.items():
+        eng = run_trace(a10_server, cfg, WORKFLOWS["driving"],
+                        pattern="bursty", n=16)
+        lat_a10[sname] = p99([lat_ms(r) for r in eng.completed])
+    emit("fig17", "a10.driving.p99", lat_a10["faastube"], "ms",
+         " ".join(f"{s}={lat_a10[s]:.0f}" for s in lat_a10))
+    # the paper's mechanism: DeepPlan's PARALLEL loading degenerates to a
+    # single link on the A10 box.  Compare DeepPlan+ against its own
+    # single-link variant on both boxes: a win on V100, parity on A10.
+    dp1 = dataclasses.replace(DEEPPLAN, h2g="single", name="deepplan-1l")
+    adv = {}
+    for server, topo in (("v100", dgx_v100), ("a10", a10_server)):
+        # compare host->gFunc transfer time (e2e p99 is queue-dominated)
+        lp = p99([r.h2g_ms for r in run_trace(
+            topo, DEEPPLAN, WORKFLOWS["driving"], pattern="bursty",
+            n=16).completed])
+        l1 = p99([r.h2g_ms for r in run_trace(
+            topo, dp1, WORKFLOWS["driving"], pattern="bursty",
+            n=16).completed])
+        adv[server] = l1 / lp
+        emit("fig17", f"{server}.parallel_pcie_advantage", adv[server], "x",
+             "h2g transfer; paper: >1 on V100, exactly 1 on A10")
+    red = 100 * (1 - lat_a10["faastube"] / lat_a10["infless+"])
+    emit("fig17", "a10.reduction_vs_infless", red, "%", "paper: up to 90%")
+    assert max(reds["infless+"]) >= 0.6
+    assert adv["v100"] >= 1.10 and abs(adv["a10"] - 1.0) <= 0.02, adv
+    return reds, lat_a10
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""Roofline analysis from the compiled dry-run (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod 16x16 mesh, from dryrun_results.json:
+
+  compute    = HLO FLOPs/chip / 197 TFLOP/s      (v5e bf16 peak)
+  memory     = HBM bytes/chip / 819 GB/s
+  collective = collective bytes/chip / 50 GB/s   (one ICI link)
+
+FLOPs and collective bytes come from the loop-aware HLO walk
+(launch/hlo_analysis.py): real measured dots including any replicated
+compute the partitioner emitted — XLA's own cost_analysis counts scan
+bodies once and is recorded alongside as `xla_flops_scan_once`.
+
+The HBM term is ANALYTIC (documented model below): the CPU-backend HLO
+legalizes bf16 dots to f32 and materializes layout copies a TPU build
+never has, so parsing byte traffic from this HLO over-reports ~100x.
+Model per chip:
+  train    accum*(2 reads of the FSDP-gathered working weights)
+           + 1 grad write + 3 opt passes (p, m, v read+write)
+           + activation traffic: L * c_act * tokens * d * 2B * accum
+  prefill  1 weight read + activation traffic (c_act residual passes)
+  decode   weights touched (all experts when batch*top_k >= E, else
+           active fraction) + full KV/state read + O(1) activations
+c_act = 8 residual-stream passes/layer (bf16 r+w for attn in/out, mlp
+in/out) — flash-attention keeps S^2 scores on-chip (kernels/).
+
+MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (prefill/decode fwd);
+MODEL_FLOPS/HLO_FLOPs exposes replication/remat waste.  MFU-proxy =
+(MODEL_FLOPS/chips/peak) / max(term) = model-flops utilization if the
+dominant term set step time.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.configs import get_arch, get_shape
+from benchmarks.common import emit
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+C_ACT = 8                  # residual-stream HBM passes per layer
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+
+_mesh_cache = {}
+
+
+def _mesh():
+    """Abstract 16x16 mesh: shape-only (no devices needed for rules)."""
+    if "m" not in _mesh_cache:
+        import jax
+        _mesh_cache["m"] = jax.sharding.AbstractMesh(
+            (16, 16), ("data", "model"))
+    return _mesh_cache["m"]
+
+
+def active_params(arch: str) -> tuple[int, int]:
+    """(total, active) params; expert FFN weights discounted by top_k/E."""
+    from repro.models import model as M
+    from repro.models.param import is_pspec
+    import jax
+
+    cfg = get_arch(arch)
+    specs = M.model_specs(cfg)
+    total = active = 0
+    for p in jax.tree.leaves(specs, is_leaf=is_pspec):
+        n = int(np.prod(p.shape))
+        total += n
+        # expert FFN leaves carry an "experts" logical dim (possibly behind
+        # the scan "stack" dim); only top_k of n_experts run per token
+        if cfg.n_experts and p.logical and "experts" in p.logical:
+            n = n * cfg.top_k // cfg.n_experts
+        active += n
+    return total, active
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    shape = get_shape(shape_name)
+    _, active = active_params(arch)
+    seq = shape.seq_len
+    if get_arch(arch).enc_layers:
+        seq //= 2              # encdec convention: S/2 frames + S/2 tokens
+    if shape.kind == "train":
+        return 6.0 * active * seq * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * active * seq * shape.global_batch
+    return 2.0 * active * shape.global_batch         # decode: 1 token each
+
+
+def _tokens_per_chip(cfg, shape, rules, mesh) -> int:
+    from repro.distributed.mesh import mesh_axis_size, spec_for
+    spec = spec_for((shape.global_batch, max(shape.seq_len, 2)),
+                    ("batch", "seq"), rules, mesh)
+    shards = 1
+    for part in spec:
+        if part is None:
+            continue
+        for ax in ((part,) if isinstance(part, str) else part):
+            shards *= mesh.shape[ax]
+    return shape.global_batch * shape.seq_len // shards
+
+
+def _gathered_weight_bytes(cfg, rules, mesh) -> int:
+    """Per-chip working-set weight bytes after the FSDP all-gather
+    (data axes removed from the rules; model-axis sharding kept)."""
+    from repro.launch.dryrun import analytic_device_bytes
+    da = ("pod", "data")
+    rules_nofsdp = {k: tuple(a for a in v if a not in da)
+                    for k, v in rules.items()}
+    from repro.models import model as M
+    return analytic_device_bytes(M.model_specs(cfg), rules_nofsdp, mesh)
+
+
+def memory_bytes(rec: dict, arch: str, shape_name: str) -> float:
+    from repro.distributed.mesh import make_rules
+    from repro.models import model as M
+    cfg, shape = get_arch(arch), get_shape(shape_name)
+    mesh = _mesh()
+    rules = make_rules(cfg, shape, mesh)
+    adb = rec["analytic_device_bytes"]
+    toks = _tokens_per_chip(cfg, shape, rules, mesh)
+    act = cfg.n_layers * C_ACT * toks * cfg.d_model * 2
+
+    if shape.kind == "train":
+        from repro.launch.dryrun import opt_state_dtype
+        from repro.training.train_step import default_accum
+        accum = default_accum(shape, mesh, cfg)
+        w_eff = _gathered_weight_bytes(cfg, rules, mesh)
+        return (accum * 2 * w_eff            # fwd+bwd weight reads / mb
+                + adb["params"]              # grad write (sharded)
+                + 3 * (adb["params"] + adb["opt"])   # optimizer passes
+                + act)                       # tokens already global/chip
+    if shape.kind == "prefill":
+        return adb["params"] + act
+    # decode
+    total, active = active_params(arch)
+    frac = 1.0
+    if cfg.n_experts and shape.global_batch * cfg.top_k < cfg.n_experts:
+        frac = active / total                # batch too small to touch all
+    return frac * adb["params"] + adb["caches"] + \
+        C_ACT * cfg.n_layers * shape.global_batch * cfg.d_model * 2
+
+
+def terms(rec: dict, chips: int = 256) -> dict:
+    comp = rec["flops"] / PEAK_FLOPS
+    mem = memory_bytes(rec, rec["arch"], rec["shape"]) / HBM_BW
+    coll = sum(rec["collective_bytes"].values()) / ICI_BW
+    dom = max(("compute", comp), ("memory", mem), ("collective", coll),
+              key=lambda kv: kv[1])
+    mf = model_flops(rec["arch"], rec["shape"])
+    ratio = mf / chips / max(rec["flops"], 1e-9)
+    mfu = (mf / chips / PEAK_FLOPS) / max(dom[1], 1e-12)
+    return {"compute_s": comp, "memory_s": mem, "collective_s": coll,
+            "dominant": dom[0], "bound_s": dom[1],
+            "model_flops": mf, "useful_ratio": ratio, "mfu_proxy": mfu}
+
+
+def load(mesh: str = "16x16", path: str = RESULTS) -> list[dict]:
+    with open(path) as f:
+        recs = json.load(f)
+    return [r for r in recs if r.get("mesh") == mesh and "error" not in r
+            and "traffic_bytes" in r]
+
+
+def main():
+    recs = load()
+    if not recs:
+        print("roofline,SKIPPED,0,,dryrun_results.json has no loop-aware "
+              "records; run `python -m repro.launch.dryrun --all "
+              "--both-meshes --out dryrun_results.json`")
+        return []
+    rows = []
+    for r in recs:
+        t = terms(r)
+        rows.append((r["arch"], r["shape"], t))
+        emit("roofline", f"{r['arch']}.{r['shape']}.bound",
+             t["bound_s"] * 1e3, "ms/step",
+             f"dom={t['dominant']} comp={t['compute_s']*1e3:.2f} "
+             f"mem={t['memory_s']*1e3:.2f} coll={t['collective_s']*1e3:.2f} "
+             f"mfu={t['mfu_proxy']*100:.0f}% useful={t['useful_ratio']*100:.0f}%")
+    worst = min(rows, key=lambda x: x[2]["mfu_proxy"])
+    collbound = [x for x in rows if x[2]["dominant"] == "collective"]
+    emit("roofline", "worst_mfu_cell", worst[2]["mfu_proxy"] * 100, "%",
+         f"{worst[0]}/{worst[1]}")
+    emit("roofline", "n_collective_bound", len(collbound), "cells",
+         " ".join(f"{a}/{s}" for a, s, _ in collbound[:4]))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper figure + TPU adaptation +
+roofline.  ``python -m benchmarks.run [names...]`` runs all (or the named
+subset) and prints one CSV block per benchmark:
+
+    bench,name,value,unit,note
+
+Each module asserts its paper-band checks internally; the runner reports
+pass/fail per module and exits nonzero on any failure.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+BENCHES = [
+    "fig03_motivation",
+    "fig11_e2e_latency",
+    "fig12_breakdown_throughput",
+    "fig13_ablation",
+    "fig14_pcie_isolation",
+    "fig15_nvlink_elastic",
+    "fig16_memory_pool",
+    "fig17_scalability",
+    "tpu_multipath",
+    "roofline",
+]
+
+
+def main(argv=None) -> int:
+    names = (argv or sys.argv[1:]) or BENCHES
+    print("bench,name,value,unit,note")
+    failed = []
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        t0 = time.time()
+        try:
+            mod.main()
+            status = "ok"
+        except AssertionError as e:
+            status = f"FAIL: {e}"
+            failed.append(name)
+        except Exception:
+            status = "ERROR"
+            traceback.print_exc()
+            failed.append(name)
+        print(f"{name},_status,{status},,{time.time() - t0:.1f}s")
+    if failed:
+        print(f"\nFAILED: {failed}", file=sys.stderr)
+        return 1
+    print(f"\nall {len(names)} benchmarks passed their paper-band checks")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

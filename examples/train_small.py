@@ -1,0 +1,88 @@
+"""End-to-end training driver: a ~100M-param minicpm-family model on a
+learnable synthetic language (sparse Markov chain), with WSD schedule,
+grad accumulation, async checkpointing and mid-run restart.
+
+Loss starts near ln(vocab)=9.0 and converges toward ln(branch)=2.08 as the
+model learns the transition table — proving the whole substrate (pipeline
+-> sharded train step -> optimizer -> checkpoint/restore) end to end.
+
+Run:  PYTHONPATH=src python examples/train_small.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import math
+import tempfile
+
+import jax
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeSpec
+from repro.data.pipeline import MarkovPipeline
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import run_training
+
+
+def model_100m(tiny: bool = False):
+    """minicpm family scaled to ~100M params (~20M with --tiny)."""
+    kw = (dict(n_layers=6, d_model=384, n_heads=6, n_kv_heads=6,
+               head_dim=64, d_ff=1536, vocab_size=512)
+          if tiny else
+          dict(n_layers=10, d_model=768, n_heads=12, n_kv_heads=12,
+               head_dim=64, d_ff=3072, vocab_size=8192))
+    cfg = dataclasses.replace(
+        get_arch("minicpm-2b"), cache_dtype="f32", **kw,
+    )
+    from repro.models import model as M
+    from repro.models.param import count_params
+    n = count_params(M.model_specs(cfg))
+    print(f"model: {n / 1e6:.1f}M params (WSD schedule, "
+          f"{cfg.n_layers}L x {cfg.d_model}d, vocab {cfg.vocab_size})")
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--tiny", action="store_true",
+                    help="~20M params for a <5 min CPU run")
+    args = ap.parse_args()
+
+    cfg = model_100m(args.tiny)
+    shape = ShapeSpec("train_small", args.seq, args.batch, "train")
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    oc = OptConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps,
+                   schedule="wsd", stable_frac=0.6)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        # phase 1: train the first half, checkpointing every 50 steps
+        from repro.distributed.fault import FaultPolicy
+        half = args.steps // 2
+        every = max(half // 2, 1)
+        state, losses1, _ = run_training(
+            cfg, shape, mesh, steps=half, oc=oc, accum=2,
+            ckpt_dir=ckpt_dir, policy=FaultPolicy(checkpoint_every=every),
+            log_every=20, pipeline_cls=MarkovPipeline)
+        print(f"phase 1 done at step {state.step}; restarting from the "
+              f"latest checkpoint to prove resumability...")
+        # phase 2: resume from checkpoint and finish
+        state, losses2, _ = run_training(
+            cfg, shape, mesh, steps=args.steps, oc=oc, accum=2,
+            ckpt_dir=ckpt_dir, resume=True,
+            policy=FaultPolicy(checkpoint_every=every), log_every=20,
+            pipeline_cls=MarkovPipeline)
+        assert state.step == args.steps
+
+    losses = losses1 + losses2
+    first, last = losses[0], sum(losses[-10:]) / 10
+    print(f"\nloss: {first:.3f} -> {last:.3f} "
+          f"(floor ln(branch)={math.log(8):.3f}, "
+          f"start ~ln(vocab)={math.log(cfg.vocab_size):.3f})")
+    assert last < first - 1.0, "loss must drop by >1 nat"
+    print("OK: end-to-end training converges and resumes from checkpoints")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""FaaSTube core: GPU/TPU-oriented inter-function data passing.
+
+Public surface:
+    FaaSTube (api.py)           — unique_id / store / fetch
+    Topology (topology.py)      — DGX-V100 / DGX-A100 / 4xA10 / TPU torus
+    PathFinder (pathfinder.py)  — Alg. 1 contention-aware parallel paths
+    LinkSim (linksim.py)        — discrete-event link timing model
+    ElasticPool (elastic_pool.py), QueueAwareMigrator (migration.py)
+    PcieScheduler (pcie_scheduler.py), CircularPinnedBuffer (pinned_buffer.py)
+"""
+from repro.core.topology import Topology, make_topology
+from repro.core.pathfinder import PathFinder
+from repro.core.linksim import LinkSim

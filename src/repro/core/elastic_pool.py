@@ -1,0 +1,141 @@
+"""Auto-scaling GPU/HBM memory pool (paper §7.1).
+
+Tracks, per producing function, the 99th-percentile request interval
+(R_window), intermediate-data size (R_size) and concurrency / accumulation
+degree (R_con); after each execution it reserves R_size * R_con for
+R_window; blocks beyond  sum(active reservations) + min_pool  are released
+back to the device.  Allocation from cached blocks is free; growing the
+pool pays the device-allocation cost (linksim.alloc_ms).
+
+Units MB; block granularity 2 MB (matches the transfer chunk size and
+GMlake's unified chunk).  This same allocator manages the JAX-side tensor
+arenas (serving/kvcache.py) — here it is driven by the link simulator for
+the paper's benchmarks.
+"""
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+
+from repro.core.linksim import alloc_ms
+
+BLOCK_MB = 2.0
+
+
+def _p99(values) -> float:
+    if not values:
+        return 0.0
+    s = sorted(values)
+    return s[min(len(s) - 1, int(0.99 * len(s)))]
+
+
+@dataclass
+class _FuncStats:
+    arrivals: deque = field(default_factory=lambda: deque(maxlen=64))
+    sizes: deque = field(default_factory=lambda: deque(maxlen=64))
+    live: int = 0                      # currently-live outputs (accumulation)
+    live_hist: deque = field(default_factory=lambda: deque(maxlen=64))
+    last_exec: float = -1.0
+
+    @property
+    def r_window(self) -> float:
+        iv = [b - a for a, b in zip(self.arrivals, list(self.arrivals)[1:])]
+        return _p99(iv)
+
+    @property
+    def r_size(self) -> float:
+        return _p99(self.sizes)
+
+    @property
+    def r_con(self) -> float:
+        return max(_p99(self.live_hist), 1.0)
+
+
+@dataclass
+class Buf:
+    buf_id: int
+    func: str
+    size_mb: float
+    blocks: int
+    t_alloc: float
+    last_access: float
+
+
+class ElasticPool:
+    def __init__(self, device: str, *, capacity_mb: float = 1024.0,
+                 min_pool_mb: float = 300.0, elastic: bool = True):
+        self.device = device
+        self.capacity_mb = capacity_mb
+        self.min_pool_mb = min_pool_mb
+        self.elastic = elastic
+        self.cached_blocks = 0          # free blocks kept warm
+        self.used_blocks = 0
+        self.bufs: dict[int, Buf] = {}
+        self.stats: dict[str, _FuncStats] = defaultdict(_FuncStats)
+        self._next = 0
+        self.timeline: list[tuple[float, float]] = []   # (t, pool MB)
+
+    # ------------------------------------------------------------ sizes ---
+    @property
+    def pool_mb(self) -> float:
+        return (self.used_blocks + self.cached_blocks) * BLOCK_MB
+
+    @property
+    def used_mb(self) -> float:
+        return self.used_blocks * BLOCK_MB
+
+    def _record(self, t):
+        self.timeline.append((t, self.pool_mb))
+
+    # ------------------------------------------------------------- alloc --
+    def alloc(self, func: str, size_mb: float, now: float) -> tuple[int, float]:
+        """Returns (buf_id, cost_ms)."""
+        st = self.stats[func]
+        st.arrivals.append(now)
+        st.sizes.append(size_mb)
+        st.live += 1
+        st.live_hist.append(st.live)
+        st.last_exec = now
+
+        blocks = max(1, int(-(-size_mb // BLOCK_MB)))
+        cost = 0.0
+        if self.cached_blocks >= blocks:
+            self.cached_blocks -= blocks
+        else:
+            grow = blocks - self.cached_blocks
+            self.cached_blocks = 0
+            cost = alloc_ms(grow * BLOCK_MB)
+        self.used_blocks += blocks
+        self._next += 1
+        self.bufs[self._next] = Buf(self._next, func, size_mb, blocks, now, now)
+        self._record(now)
+        return self._next, cost
+
+    def free(self, buf_id: int, now: float):
+        buf = self.bufs.pop(buf_id)
+        self.used_blocks -= buf.blocks
+        self.cached_blocks += buf.blocks
+        st = self.stats[buf.func]
+        st.live = max(0, st.live - 1)
+        if self.elastic:
+            self.gc(now)
+        self._record(now)
+
+    # ------------------------------------------------------------- gc -----
+    def target_cache_mb(self, now: float) -> float:
+        """sum_f Data_size(f) * 1{now within f's reservation window}."""
+        total = 0.0
+        for f, st in self.stats.items():
+            if st.last_exec < 0:
+                continue
+            if now - st.last_exec <= st.r_window:
+                total += st.r_size * st.r_con
+        return max(total, self.min_pool_mb)
+
+    def gc(self, now: float):
+        """Release cached blocks beyond the live reservations."""
+        target_blocks = int(self.target_cache_mb(now) // BLOCK_MB)
+        excess = self.cached_blocks - max(target_blocks - self.used_blocks, 0)
+        if excess > 0:
+            self.cached_blocks -= excess
+        self._record(now)

@@ -1,0 +1,238 @@
+"""Discrete-event link simulator — the timing model for every benchmark.
+
+Chunk-level, event-driven: each directed link transfers one chunk at a time
+at full link bandwidth; concurrency and bandwidth sharing emerge from chunk
+interleaving, exactly the granularity at which FaaSTube (and CUDA DMA
+engines) actually operate.  Scheduling policy per link:
+
+  fifo — native GPU PCIe scheduling (the paper's baseline behaviour)
+  drr  — deficit-round-robin weighted by the scheduler's per-function rate
+         allocations (FaaSTube's proportional batched triggering)
+
+Time unit: ms.  Sizes: MB.  Bandwidth GB/s (== MB/ms, so t = size/bw).
+
+Cost model knobs (paper-calibrated):
+  pin_ms_per_mb   = 0.7   (70 ms / 100 MB pinned allocation, Fig. 5b)
+  trigger_ms      = 0.01  (per chunk-batch launch overhead)
+  alloc_ms        = 1.0 + 0.002/MB (cudaMalloc-style device allocation)
+  ipc_ms          = 0.3   (CUDA IPC handle open per buffer)
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+
+from repro.core.topology import Topology, PCIE_UNPINNED
+
+PIN_MS_PER_MB = 0.7
+TRIGGER_MS = 0.01
+BATCH_CHUNKS = 5
+IPC_MS = 0.3
+
+
+def alloc_ms(size_mb: float) -> float:
+    return 1.0 + 0.002 * size_mb
+
+
+@dataclass
+class Transfer:
+    tid: int
+    func: str
+    size_mb: float
+    paths: list          # [(path tuple, bw weight)]
+    t_submit: float
+    chunks_done: int = 0
+    n_chunks: int = 0
+    t_done: float = -1.0
+    extra_latency: float = 0.0    # pin/alloc costs folded in
+    on_done: object = None        # callback(sim, transfer)
+    unpinned: bool = False        # host-adjacent hops capped at 3 GB/s
+
+
+@dataclass(order=True)
+class _Event:
+    t: float
+    seq: int
+    kind: str = field(compare=False)
+    payload: tuple = field(compare=False, default=())
+
+
+class LinkSim:
+    def __init__(self, topo: Topology, *, policy: str = "drr",
+                 chunk_mb: float = 2.0, pinned_cached: bool = True,
+                 unpinned_hosts: bool = False):
+        self.topo = topo
+        self.policy = policy
+        self.chunk_mb = chunk_mb
+        self.pinned_cached = pinned_cached
+        self.unpinned_hosts = unpinned_hosts
+        self.now = 0.0
+        self._seq = itertools.count()
+        self._events: list[_Event] = []
+        self._link_free: dict[tuple[str, str], bool] = defaultdict(lambda: True)
+        self._queues: dict[tuple[str, str], dict[str, deque]] = \
+            defaultdict(lambda: defaultdict(deque))
+        self._rr: dict[tuple[str, str], deque] = defaultdict(deque)
+        self._deficit: dict[tuple[str, str], dict[str, float]] = \
+            defaultdict(lambda: defaultdict(float))
+        self.weights: dict[str, float] = defaultdict(lambda: 1.0)
+        self.transfers: dict[int, Transfer] = {}
+        self._tid = itertools.count()
+        self.link_busy_ms: dict[tuple[str, str], float] = defaultdict(float)
+
+    # ------------------------------------------------------------ submit --
+    def set_rate_weight(self, func: str, weight: float):
+        self.weights[func] = max(weight, 1e-6)
+
+    def call_at(self, t: float, fn):
+        """Schedule an arbitrary callback(sim) at time t."""
+        self._push(_Event(t, next(self._seq), "call", (fn,)))
+
+    def submit(self, func: str, paths, size_mb: float, *,
+               t: float | None = None, pin_fresh_mb: float = 0.0,
+               alloc_fresh_mb: float = 0.0, ipc_handles: int = 0,
+               on_done=None, unpinned: bool = False) -> int:
+        """Submit a (possibly multi-path) transfer.  paths: [(path, bw)]."""
+        t = self.now if t is None else t
+        tid = next(self._tid)
+        tr = Transfer(tid, func, size_mb, list(paths), t, on_done=on_done,
+                      unpinned=unpinned)
+        # fixed costs charged before the first chunk moves
+        if pin_fresh_mb > 0:
+            tr.extra_latency += PIN_MS_PER_MB * pin_fresh_mb
+        if alloc_fresh_mb > 0:
+            tr.extra_latency += alloc_ms(alloc_fresh_mb)
+        tr.extra_latency += IPC_MS * ipc_handles
+        start = t + tr.extra_latency
+
+        n_chunks = max(1, round(size_mb / self.chunk_mb))
+        tr.n_chunks = n_chunks
+        total_bw = sum(bw for _, bw in tr.paths) or 1.0
+        # stripe chunks across paths proportional to path bandwidth (§6.2)
+        alloc = [max(1, round(n_chunks * bw / total_bw)) for _, bw in tr.paths]
+        while sum(alloc) > n_chunks:
+            alloc[alloc.index(max(alloc))] -= 1
+        while sum(alloc) < n_chunks:
+            alloc[alloc.index(min(alloc))] += 1
+        ci = 0
+        for (path, _bw), n in zip(tr.paths, alloc):
+            if len(path) < 2:            # degenerate: src == dst, instant
+                tr.n_chunks -= n
+                continue
+            for k in range(n):
+                batch_delay = (ci // BATCH_CHUNKS) * TRIGGER_MS
+                self._push(_Event(start + batch_delay, next(self._seq), "hop",
+                                  (tid, tuple(path), 0, self.chunk_mb)))
+                ci += 1
+        self.transfers[tid] = tr
+        if tr.n_chunks <= 0:
+            tr.n_chunks = 0
+            tr.t_done = start
+            if tr.on_done is not None:
+                self.call_at(start, lambda sim, tr=tr: tr.on_done(sim, tr))
+        return tid
+
+    # ------------------------------------------------------------ engine --
+    def _push(self, ev):
+        heapq.heappush(self._events, ev)
+
+    def _link_bw(self, a, b) -> float:
+        bw = self.topo.bw(a, b)
+        if self.unpinned_hosts and ("host" in a or "host" in b or
+                                    "pcie" in a or "pcie" in b):
+            bw = min(bw, PCIE_UNPINNED)
+        return bw
+
+    def _enqueue_chunk(self, link, func, payload):
+        q = self._queues[link]
+        if not q[func] and func not in self._rr[link]:
+            self._rr[link].append(func)
+        q[func].append(payload)
+        if self._link_free[link]:
+            self._dispatch(link)
+
+    def _pick(self, link):
+        q = self._queues[link]
+        rr = self._rr[link]
+        if self.policy == "fifo":
+            # oldest chunk across functions
+            best, best_seq = None, None
+            for f, dq in q.items():
+                if dq and (best_seq is None or dq[0][0] < best_seq):
+                    best, best_seq = f, dq[0][0]
+            return best
+        # deficit round robin weighted by rate allocation
+        for _ in range(len(rr)):
+            f = rr[0]
+            if not q[f]:
+                rr.popleft()
+                continue
+            self._deficit[link][f] += self.weights[f] * self.chunk_mb
+            if self._deficit[link][f] >= self.chunk_mb:
+                self._deficit[link][f] -= self.chunk_mb
+                rr.rotate(-1)
+                return f
+            rr.rotate(-1)
+        return rr[0] if rr and q[rr[0]] else None
+
+    def _dispatch(self, link):
+        func = self._pick(link)
+        if func is None:
+            return
+        q = self._queues[link][func]
+        if not q:
+            return
+        seq, tid, path, hop, size = q.popleft()
+        bw = self._link_bw(*link)
+        if self.transfers[tid].unpinned and any(
+                n.startswith(("host", "pcie")) or ":host" in n or ":pcie" in n
+                for n in link):
+            bw = min(bw, PCIE_UNPINNED)
+        dur = size / max(bw, 1e-9)
+        self._link_free[link] = False
+        self.link_busy_ms[link] += dur
+        self._push(_Event(self.now + dur, next(self._seq), "done",
+                          (link, tid, path, hop, size)))
+
+    def step(self) -> bool:
+        if not self._events:
+            return False
+        ev = heapq.heappop(self._events)
+        self.now = max(self.now, ev.t)
+        if ev.kind == "hop":
+            tid, path, hop, size = ev.payload
+            link = (path[hop], path[hop + 1])
+            self._enqueue_chunk(link, self.transfers[tid].func,
+                                (next(self._seq), tid, path, hop, size))
+        elif ev.kind == "done":
+            link, tid, path, hop, size = ev.payload
+            self._link_free[link] = True
+            if hop + 1 < len(path) - 1:
+                # pipelined multi-hop forwarding: next hop immediately
+                self._push(_Event(self.now, next(self._seq), "hop",
+                                  (tid, path, hop + 1, size)))
+            else:
+                tr = self.transfers[tid]
+                tr.chunks_done += 1
+                if tr.chunks_done == tr.n_chunks:
+                    tr.t_done = self.now
+                    if tr.on_done is not None:
+                        tr.on_done(self, tr)
+            self._dispatch(link)
+        elif ev.kind == "call":
+            ev.payload[0](self)
+        return True
+
+    def run(self, until: float | None = None):
+        while self._events:
+            if until is not None and self._events[0].t > until:
+                break
+            self.step()
+        return self.now
+
+    def latency(self, tid: int) -> float:
+        tr = self.transfers[tid]
+        assert tr.t_done >= 0, f"transfer {tid} not complete"
+        return tr.t_done - tr.t_submit

@@ -1,0 +1,62 @@
+"""Queue-aware data migration (paper §7.2) vs the LRU baseline.
+
+When the device store hits its capacity limit, victims must spill to host
+memory.  LRU evicts the oldest — but in a serverless workflow the oldest
+intermediate is usually the *next* one consumed (its downstream function was
+enqueued first).  Queue-aware migration instead evicts the item whose
+consumer sits furthest back in the request queue, clears consumed items
+immediately, and prefetches spilled items back as memory frees up.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StoredItem:
+    data_id: str
+    size_mb: float
+    t_stored: float
+    last_access: float
+    consumer_pos: float = float("inf")   # position of downstream fn in queue
+    on_host: bool = False
+
+
+class Migrator:
+    def __init__(self, policy: str = "queue"):
+        assert policy in ("queue", "lru")
+        self.policy = policy
+        self.migrations = 0
+        self.reloads = 0
+
+    def pick_victims(self, items: list[StoredItem], need_mb: float
+                     ) -> list[StoredItem]:
+        """Choose device-resident items to spill until need_mb is covered."""
+        resident = [i for i in items if not i.on_host]
+        if self.policy == "lru":
+            order = sorted(resident, key=lambda i: i.last_access)
+        else:
+            # furthest-back consumer first; unconsumed (inf) are first of all
+            order = sorted(resident, key=lambda i: -i.consumer_pos)
+        out, acc = [], 0.0
+        for it in order:
+            if acc >= need_mb:
+                break
+            out.append(it)
+            acc += it.size_mb
+        self.migrations += len(out)
+        return out
+
+    def pick_prefetch(self, items: list[StoredItem], space_mb: float
+                      ) -> list[StoredItem]:
+        """Reload spilled items whose consumers are soonest."""
+        spilled = sorted([i for i in items if i.on_host],
+                         key=lambda i: i.consumer_pos)
+        out, acc = [], 0.0
+        for it in spilled:
+            if acc + it.size_mb > space_mb:
+                break
+            out.append(it)
+            acc += it.size_mb
+        self.reloads += len(out)
+        return out

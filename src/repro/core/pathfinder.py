@@ -1,0 +1,165 @@
+"""Contention-aware parallel path selection (paper Algorithm 1).
+
+Treats the server as a network: a live bandwidth matrix BW tracks residual
+capacity per directed edge; path search returns multiple parallel paths for
+one point-to-point transfer, preferring *free* paths (no other function on
+any edge), then balancing onto busy paths when the endpoints still have
+spare ingress/egress bandwidth.
+
+Used three ways:
+  * NVLink scheduling on GPU servers (paper §6.2),
+  * ICI multi-path routing on the TPU torus (our adaptation),
+  * link-failure rerouting (fault tolerance: dead link -> edge removed).
+"""
+from __future__ import annotations
+
+import heapq
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+from repro.core.topology import Topology
+
+
+@dataclass
+class PathAlloc:
+    func: str
+    path: tuple[str, ...]
+    bw: float
+
+
+class PathFinder:
+    def __init__(self, topo: Topology, *, transit: str = "gpu"):
+        """transit: node-name prefix allowed as intermediate hop."""
+        self.topo = topo
+        self.transit = transit
+        self.residual: dict[tuple[str, str], float] = dict(topo.edges)
+        self.users: dict[tuple[str, str], set[str]] = defaultdict(set)
+        self.allocs: dict[str, list[PathAlloc]] = defaultdict(list)
+
+    # ------------------------------------------------------------- util ---
+    def _edge_ok(self, a, b, *, free_only: bool,
+                 ignore_load: bool = False) -> bool:
+        if ignore_load:
+            return self.topo.bw(a, b) > 0.0
+        r = self.residual.get((a, b), 0.0)
+        if r <= 1e-9:
+            return False
+        if free_only and self.users[(a, b)]:
+            return False
+        return True
+
+    def _next_shortest_path(self, src, dst, *, free_only: bool,
+                            avoid_edges=frozenset(),
+                            ignore_load: bool = False):
+        """Dijkstra on hop count then max bottleneck bw.
+
+        ignore_load=True routes on the raw topology (saturated graph
+        fallback: the link simulator arbitrates sharing chunk by chunk).
+        """
+        heap = [(0, -1e18, src, (src,))]
+        seen = {}
+        while heap:
+            hops, negbw, node, path = heapq.heappop(heap)
+            if node == dst:
+                return path, -negbw
+            if node in seen and seen[node] <= (hops, negbw):
+                continue
+            seen[node] = (hops, negbw)
+            for nb in self.topo.neighbors(node):
+                if nb in path:
+                    continue
+                if (node, nb) in avoid_edges:
+                    continue
+                # transit check on the node-local name ("n3:pcie0"->"pcie0")
+                local = nb.split(":")[-1]
+                if nb != dst and not any(
+                        local.startswith(p) for p in self.transit.split(",")):
+                    continue
+                if not self._edge_ok(node, nb, free_only=free_only,
+                                     ignore_load=ignore_load):
+                    continue
+                bw = min(-negbw, self.topo.bw(node, nb) if ignore_load
+                         else self.residual[(node, nb)])
+                heapq.heappush(heap, (hops + 1, -bw, nb, path + (nb,)))
+        return None, 0.0
+
+    def _egress(self, g) -> float:
+        return sum(self.residual.get((g, nb), 0.0) for nb in self.topo.neighbors(g))
+
+    def _ingress(self, g) -> float:
+        return sum(self.residual.get((nb, g), 0.0) for nb in self.topo.neighbors(g))
+
+    # -------------------------------------------------------- Algorithm 1 -
+    def select_paths(self, func: str, src: str, dst: str,
+                     max_paths: int = 8) -> list[PathAlloc]:
+        """Contention-aware parallel transfer paths for func: src -> dst."""
+        paths: list[PathAlloc] = []
+        # Phase 1: free paths (no contention with other functions)
+        while len(paths) < max_paths:
+            path, bw = self._next_shortest_path(src, dst, free_only=True)
+            if path is None:
+                break
+            self._allocate(func, path, bw, paths)
+            if self._egress(src) <= 1e-9 or self._ingress(dst) <= 1e-9:
+                break
+        # Phase 2: busy paths, when endpoints still have spare bandwidth
+        if self._egress(src) > 1e-9 and self._ingress(dst) > 1e-9:
+            while len(paths) < max_paths:
+                path, bw = self._next_shortest_path(src, dst, free_only=False)
+                if path is None:
+                    break
+                # bandwidth balancing: try to migrate the busiest co-user to
+                # an alternative free path before sharing
+                self._rebalance_users(path)
+                bw = min(self.residual[(a, b)]
+                         for a, b in zip(path, path[1:]))
+                if bw <= 1e-9:
+                    break
+                self._allocate(func, path, bw, paths)
+                if self._egress(src) <= 1e-9 or self._ingress(dst) <= 1e-9:
+                    break
+        return paths
+
+    def _rebalance_users(self, path):
+        edges = list(zip(path, path[1:]))
+        for e in edges:
+            for other in list(self.users[e]):
+                allocs = [a for a in self.allocs[other] if e in
+                          zip(a.path, a.path[1:])]
+                for a in allocs:
+                    alt, altbw = self._next_shortest_path(
+                        a.path[0], a.path[-1], free_only=True,
+                        avoid_edges=frozenset(edges))
+                    if alt is not None and altbw >= a.bw:
+                        self._release_alloc(other, a)
+                        self._allocate(other, alt, a.bw, self.allocs[other])
+
+    def _allocate(self, func, path, bw, out_list):
+        bw = min(bw, *(self.residual[(a, b)] for a, b in zip(path, path[1:])))
+        alloc = PathAlloc(func, tuple(path), bw)
+        for a, b in zip(path, path[1:]):
+            self.residual[(a, b)] -= bw
+            self.users[(a, b)].add(func)
+        if out_list is not self.allocs[func]:
+            self.allocs[func].append(alloc)
+        out_list.append(alloc)
+        return alloc
+
+    def _release_alloc(self, func, alloc: PathAlloc):
+        for a, b in zip(alloc.path, alloc.path[1:]):
+            self.residual[(a, b)] += alloc.bw
+            self.users[(a, b)].discard(func)
+        if alloc in self.allocs[func]:
+            self.allocs[func].remove(alloc)
+
+    def release(self, func: str):
+        for alloc in list(self.allocs[func]):
+            self._release_alloc(func, alloc)
+        self.allocs.pop(func, None)
+
+    def fail_link(self, a: str, b: str):
+        """Fault tolerance: remove a dead link from the graph."""
+        for e in ((a, b), (b, a)):
+            self.topo.edges.pop(e, None)
+            self.residual.pop(e, None)
+            self.users.pop(e, None)

@@ -1,0 +1,55 @@
+"""SLO-aware PCIe transfer scheduling (paper §6.1).
+
+Rate_least(f) = data_size / (L_slo - L_infer): the minimum bandwidth that
+still meets f's SLO.  The scheduler admits each function with that weight
+on the link simulator's DRR queues (the simulator's chunk interleaving IS
+the paper's proportional batched triggering), and grants the residual idle
+bandwidth to the function with the tightest SLO.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.linksim import LinkSim
+
+
+@dataclass
+class _Flow:
+    func: str
+    size_mb: float
+    slo_ms: float
+    infer_ms: float
+
+    @property
+    def rate_least(self) -> float:       # GB/s == MB/ms
+        slack = max(self.slo_ms - self.infer_ms, 1e-3)
+        return self.size_mb / slack
+
+
+class PcieScheduler:
+    def __init__(self, sim: LinkSim, bw_all: float):
+        self.sim = sim
+        self.bw_all = bw_all
+        self.flows: dict[str, _Flow] = {}
+
+    def admit(self, func: str, size_mb: float, slo_ms: float, infer_ms: float):
+        self.flows[func] = _Flow(func, size_mb, slo_ms, infer_ms)
+        self._reweigh()
+
+    def complete(self, func: str):
+        self.flows.pop(func, None)
+        self._reweigh()
+
+    def _reweigh(self):
+        if not self.flows:
+            return
+        total_least = sum(f.rate_least for f in self.flows.values())
+        scale = min(1.0, self.bw_all / max(total_least, 1e-9))
+        idle = max(self.bw_all - total_least, 0.0)
+        tightest = min(self.flows.values(),
+                       key=lambda f: f.slo_ms - f.infer_ms)
+        for f in self.flows.values():
+            w = f.rate_least * scale
+            if f.func == tightest.func:
+                w += idle
+            self.sim.set_rate_weight(f.func, w)

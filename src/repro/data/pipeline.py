@@ -1,0 +1,80 @@
+"""Deterministic, restartable synthetic-token data pipeline.
+
+Checkpoint-resumable: the pipeline's full RNG state is (seed, step), both
+stored in the checkpoint manifest — after restart the stream continues
+exactly where it left off (tested bitwise in tests/test_training.py).
+Shard-aware: each data-parallel host could slice its rows by host index; in
+this single-process container the global batch is produced whole and pjit
+shards it on device_put.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.io import synthetic_batch
+
+
+@dataclass
+class Pipeline:
+    cfg: ArchConfig
+    shape: ShapeSpec
+    seed: int = 0
+    step: int = 0
+
+    def next_batch(self):
+        key = jax.random.fold_in(jax.random.key(self.seed), self.step)
+        batch = synthetic_batch(self.cfg, self.shape, key)
+        self.step += 1
+        return batch
+
+    def state(self) -> dict:
+        return {"seed": self.seed, "step": self.step}
+
+    @classmethod
+    def from_state(cls, cfg, shape, state):
+        return cls(cfg, shape, seed=state["seed"], step=state["step"])
+
+
+@dataclass
+class MarkovPipeline(Pipeline):
+    """Learnable synthetic language: a sparse order-1 Markov chain.
+
+    Each token has `branch` plausible successors (uniform over them), so
+    the optimal cross-entropy is ln(branch) — far below ln(vocab).  A model
+    that learns the transition table drives loss from ~ln(vocab) down
+    toward ln(branch); examples/train_small.py uses this to demonstrate an
+    end-to-end run whose loss measurably converges.  Same (seed, step)
+    resumability contract as Pipeline.
+    """
+
+    branch: int = 8
+
+    def __post_init__(self):
+        v = self.cfg.vocab_size
+        key = jax.random.key(0xA11CE)
+        # successor table: (vocab, branch) int32, fixed for a given cfg
+        self._succ = jax.random.randint(
+            key, (v, self.branch), 0, v, jnp.int32)
+
+    def next_batch(self):
+        key = jax.random.fold_in(jax.random.key(self.seed), self.step)
+        B, S = self.shape.global_batch, self.shape.seq_len
+        k0, k1 = jax.random.split(key)
+        first = jax.random.randint(k0, (B,), 0, self.cfg.vocab_size,
+                                   jnp.int32)
+        picks = jax.random.randint(k1, (B, S), 0, self.branch, jnp.int32)
+
+        def step(tok, pick):
+            nxt = self._succ[tok, pick]
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(step, first, picks.T)
+        tokens = toks.T                      # (B, S)
+        batch = synthetic_batch(self.cfg, self.shape, key)
+        batch["tokens"] = tokens            # loss_fn targets = next token
+        self.step += 1
+        return batch

@@ -1,0 +1,85 @@
+"""Gradient compression for cross-pod reduction: int8 quantized all-reduce
+with error feedback.
+
+On the 2x16x16 multi-pod mesh the within-pod reduction stays full precision
+(fast ICI); the pod-to-pod hop (slower DCI links) carries int8 codes + one
+f32 scale per 128-block — ~4x less cross-pod traffic.  The quantization
+residual is carried in an error-feedback buffer (kept alongside optimizer
+state) so the bias vanishes over steps (EF-SGD style).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+_BLOCK = 128
+
+
+def _pad_to_block(x):
+    n = x.size
+    npad = (-n) % _BLOCK
+    flat = jnp.pad(x.reshape(-1), (0, npad))
+    return flat.reshape(-1, _BLOCK), n
+
+
+def quantize(x):
+    xb, n = _pad_to_block(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.round(xb / scale).astype(jnp.int8)
+    return q, scale, n
+
+
+def dequantize(q, scale, n, shape):
+    x = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return x.reshape(shape)
+
+
+def compressed_psum_leaf(g, err, axis_name):
+    """Quantize (g + err) -> psum int8 codes -> dequantize.
+
+    Returns (reduced, new_err).  Codes are made commensurable by rescaling
+    every pod's codes to the max participating block scale; the int8 codes
+    are accumulated in int32 (no overflow for <= 2^23 pods).
+    """
+    gf = g.astype(jnp.float32) + err
+    q, scale, n = quantize(gf)
+    gmax = jax.lax.pmax(scale, axis_name)
+    requant = jnp.round(q.astype(jnp.float32) * (scale / gmax)).astype(jnp.int8)
+    summed = jax.lax.psum(requant.astype(jnp.int32), axis_name)
+    reduced_blocks = summed.astype(jnp.float32) * gmax
+    reduced = reduced_blocks.reshape(-1)[:n].reshape(g.shape)
+    # error feedback: the part this pod failed to encode
+    sent = (requant.astype(jnp.float32) * gmax).reshape(-1)[:n].reshape(g.shape)
+    new_err = gf - sent
+    return reduced.astype(g.dtype), new_err
+
+
+def cross_pod_grad_sync(grads, err_tree, mesh, axis_name: str = "pod"):
+    """shard_map over the pod axis: int8 all-reduce every gradient leaf.
+
+    Gradients enter as per-pod partial sums (batch sharded over "pod" must
+    NOT have been psum'd over it yet); returns fully-reduced gradients.
+    """
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_tree)
+
+    def body(*leaves):
+        n = len(leaves) // 2
+        gs, es = leaves[:n], leaves[n:]
+        out = [compressed_psum_leaf(g, e, axis_name) for g, e in zip(gs, es)]
+        return tuple(o[0] for o in out) + tuple(o[1] for o in out)
+
+    res = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=tuple(P() for _ in range(2 * len(flat_g))),
+        out_specs=tuple(P() for _ in range(2 * len(flat_g))),
+        axis_names={axis_name}, check_vma=False,
+    )(*flat_g, *flat_e)
+    n = len(flat_g)
+    return (jax.tree.unflatten(tdef, res[:n]),
+            jax.tree.unflatten(tdef, res[n:]))
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,190 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every parameter / activation dim is named by a *logical axis*; a rule table
+maps logical axes to mesh axes per (arch, shape).  ``spec_for`` drops mesh
+axes that do not divide the dim size (replicate-on-mismatch), so a single
+rule table serves every architecture (e.g. grok's 8 experts on a 16-way
+model axis fall back to expert-d_ff tensor parallelism).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+Rules = dict[str, tuple[str, ...]]
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def mesh_axis_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _param_count(cfg: ArchConfig) -> int:
+    from repro.models import model as M          # lazy: avoids import cycle
+    from repro.models.param import count_params
+    return count_params(M.model_specs(cfg))
+
+
+# Dense models below this size train fastest as pure DP + ZeRO-1 on a
+# 256-chip pod: TP-16 either replicates attention outright (36/12/4 heads
+# don't divide 16) or trades matmul efficiency for per-layer psums, and
+# ZeRO-3 re-gathers weights every microbatch.  Measured on the dry-run:
+# minicpm train_4k bound 5.59s -> 0.54s (EXPERIMENTS.md §Perf).
+DP_SMALL_PARAMS = 8e9
+
+
+def use_small_dense_dp(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> bool:
+    if not shape.is_training or cfg.n_experts:
+        return False
+    total = mesh_axis_size(mesh, data_axes(mesh)) * mesh.shape["model"]
+    if shape.global_batch % total:
+        return False
+    return _param_count(cfg) < DP_SMALL_PARAMS
+
+
+def make_rules(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> Rules:
+    """Rule table for one (arch, shape, mesh) cell."""
+    da = data_axes(mesh)
+    dp = mesh_axis_size(mesh, da)
+
+    rules: Rules = {
+        # activations
+        "batch": da,
+        "seq": (),
+        "act_embed": (),
+        # weights
+        "embed": da if shape.is_training else (),   # FSDP only when training
+        "embed_mlp": da if shape.is_training else (),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "experts": ("model",),
+        "expert_mlp": (),
+        "layers": (),
+        "stack": (),
+        # attention / recurrent state
+        "kv_seq": ("model",),                       # flash-decoding layout
+        "state_inner": ("model",),                  # mamba d_inner, mlstm dv
+        "head_qk": (),
+        "head_v": ("model",),                       # mLSTM C-state v-dim
+        # unshardable leftovers
+        "conv": (),
+        "pos": (),
+    }
+
+    # Small dense models: pure data parallelism over EVERY mesh axis with
+    # replicated weights (optimizer state sharded via make_opt_rules =
+    # ZeRO-1).  No weight gathers, no TP psums, no replicated attention.
+    if use_small_dense_dp(cfg, shape, mesh):
+        for k in ("embed", "embed_mlp", "heads", "kv_heads", "mlp", "vocab",
+                  "state_inner", "head_v", "kv_seq"):
+            rules[k] = ()
+        rules["batch"] = (*da, "model")
+        return rules
+
+    # Experts that do not divide the model axis: replicate experts, TP the
+    # expert FFN width instead (grok-1: 8 experts on a 16-way axis).
+    if cfg.n_experts and cfg.n_experts % mesh.shape["model"] != 0:
+        rules["experts"] = ()
+        rules["expert_mlp"] = ("model",)
+
+    # Serving big MoE: TP-16 alone cannot hold the experts (jamba 398B,
+    # grok 314B, dbrx 132B).  Go 2D: expert FFN width over the data axes
+    # as well.  Decode replicates the (tiny, memory-bound) batch and
+    # shards the KV sequence everywhere; prefill MUST keep the batch
+    # data-sharded — replicating 32k-token prefill activations on every
+    # chip cost 88 GB/chip of temps in the dry-run (§Perf).
+    if cfg.n_experts and not shape.is_training:
+        rules["expert_mlp"] = da + rules["expert_mlp"]
+        if shape.kind == "decode":
+            rules["batch"] = ()
+            rules["kv_seq"] = (*da, "model")
+
+    # Decode with a batch too small for the data axes: put the data axes on
+    # the KV sequence dim instead (long_500k: batch=1 -> 256-way seq shards).
+    if shape.kind == "decode" and shape.global_batch % dp != 0:
+        rules["batch"] = ()
+        rules["kv_seq"] = (*da, "model")
+
+    # NOTE on big dense decode (qwen2-72b: 11.6 GB/chip of TP-16 weights =
+    # 22.4 ms memory term): 2D weight sharding was tried and REFUTED —
+    # any data-axis weight dim forces the decode batch to replicate, and
+    # the residual-stream psums that replication adds (~1.7 GB/step,
+    # independent of which weights moved) exceed the memory saving
+    # (bound 22.4 -> 34.4 ms collective-bound; EXPERIMENTS.md §Perf cell
+    # C iterations 1-2).  The winning lever is W8A16 weight quantization
+    # (serving/wquant.py), which cuts the same term with no collectives.
+    return rules
+
+
+def make_opt_rules(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                   rules: Rules) -> Rules:
+    """Sharding rules for optimizer state.
+
+    Mirrors the param rules except under small-dense DP, where params are
+    replicated but the f32 moments would not fit replicated: ZeRO-1 —
+    moments sharded over every axis via their embed/vocab dims; the
+    update computes each chip's shard and pjit re-gathers new params.
+    """
+    if not use_small_dense_dp(cfg, shape, mesh):
+        return rules
+    out = dict(rules)
+    out["embed"] = (*data_axes(mesh), "model")
+    out["vocab"] = ("model",)
+    out["mlp"] = ("model",)
+    return out
+
+
+def spec_for(
+    shape: tuple[int, ...],
+    logical: tuple[str | None, ...],
+    rules: Rules,
+    mesh: Mesh,
+) -> PS:
+    """PartitionSpec for a concrete shape, with divisibility fallback."""
+    assert len(shape) == len(logical), (shape, logical)
+    used: set[str] = set()
+    parts = []
+    for dim, name in zip(shape, logical):
+        if name is None:
+            parts.append(None)
+            continue
+        axes = rules.get(name, ())
+        # drop trailing axes until the dim divides (replicate-on-mismatch);
+        # also drop axes already used by another dim of this array.
+        axes = tuple(a for a in axes if a not in used)
+        while axes and dim % mesh_axis_size(mesh, axes) != 0:
+            axes = axes[:-1]
+        if not axes:
+            parts.append(None)
+        else:
+            used.update(axes)
+            parts.append(axes if len(axes) > 1 else axes[0])
+    return PS(*parts)
+
+
+def sharding_for(
+    shape: tuple[int, ...],
+    logical: tuple[str | None, ...],
+    rules: Rules,
+    mesh: Mesh,
+) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, logical, rules, mesh))
+
+
+def constrain(x, logical: tuple[str | None, ...], rules: Rules, mesh: Mesh):
+    """with_sharding_constraint by logical axes (no-op off-mesh)."""
+    try:
+        spec = spec_for(x.shape, logical, rules, mesh)
+    except Exception:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

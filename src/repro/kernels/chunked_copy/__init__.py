@@ -1,0 +1,3 @@
+from repro.kernels.chunked_copy.kernel import gather_chunks, scatter_chunks
+from repro.kernels.chunked_copy.ref import gather_chunks_ref, scatter_chunks_ref
+from repro.kernels.chunked_copy.ops import gather, scatter

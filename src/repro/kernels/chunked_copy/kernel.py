@@ -1,0 +1,79 @@
+"""Chunked pool-slab gather/scatter Pallas TPU kernel.
+
+The data plane of FaaSTube's store: intermediate tensors live as 2 MB
+slabs in the elastic pool; a fetch materializes a logical tensor by
+gathering its slab list (and a store scatters it back).  On GPU this is
+cudaMemcpyAsync per chunk; on TPU we fuse the gather into one kernel whose
+BlockSpec index_map reads the slab table via scalar prefetch — each grid
+step DMAs one slab HBM->VMEM->HBM with no host round-trip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _copy_kernel(idx_ref, src_ref, out_ref):
+    out_ref[0] = src_ref[0]
+
+
+def gather_chunks(src, idx, *, interpret: bool = True):
+    """out[i] = src[idx[i]].  src: (N, C); idx: (M,) int32 -> (M, C)."""
+    N, C = src.shape
+    M = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M,),
+        in_specs=[pl.BlockSpec((1, C), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, C), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, C), src.dtype),
+        interpret=interpret,
+    )(idx, src)
+
+
+def scatter_chunks(dst, src, idx, *, interpret: bool = True):
+    """dst[idx[i]] = src[i] (non-aliasing slab writes).
+
+    dst: (N, C); src: (M, C); idx: (M,) int32 with unique entries.
+    Implemented as a full-pool pass: grid over N, each step either copies
+    the incoming slab or keeps the existing one (alias-free functional
+    update; on real TPU input_output_aliasing makes this in-place).
+    """
+    N, C = dst.shape
+    M = idx.shape[0]
+    # inverse map: for each dst slab, which src row lands there (-1 = keep)
+    inv = jnp.full((N,), -1, jnp.int32).at[idx].set(jnp.arange(M, dtype=jnp.int32))
+
+    def kernel(inv_ref, dst_ref, src_ref, out_ref):
+        i = pl.program_id(0)
+        take = inv_ref[i] >= 0
+
+        @pl.when(take)
+        def _src():
+            out_ref[0] = src_ref[0]
+
+        @pl.when(jnp.logical_not(take))
+        def _keep():
+            out_ref[0] = dst_ref[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, C), lambda i, inv_ref: (i, 0)),
+            pl.BlockSpec((1, C), lambda i, inv_ref: (jnp.maximum(inv_ref[i], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C), lambda i, inv_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, C), dst.dtype),
+        interpret=interpret,
+    )(inv, dst, src)

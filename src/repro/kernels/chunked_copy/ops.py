@@ -1,0 +1,28 @@
+"""Jit'd wrappers for pool-slab gather/scatter."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.chunked_copy.kernel import gather_chunks, scatter_chunks
+from repro.kernels.chunked_copy.ref import gather_chunks_ref, scatter_chunks_ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def gather(src, idx, *, use_pallas: bool = True, interpret: bool | None = None):
+    if not use_pallas:
+        return gather_chunks_ref(src, idx)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return gather_chunks(src, idx, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def scatter(dst, src, idx, *, use_pallas: bool = True,
+            interpret: bool | None = None):
+    if not use_pallas:
+        return scatter_chunks_ref(dst, src, idx)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return scatter_chunks(dst, src, idx, interpret=interpret)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracles for slab gather/scatter."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_chunks_ref(src, idx):
+    return src[idx]
+
+
+def scatter_chunks_ref(dst, src, idx):
+    return dst.at[idx].set(src)

@@ -1,0 +1,109 @@
+"""Flash attention Pallas TPU kernel (prefill/train hot spot).
+
+Grid (batch*q_heads, n_q_blocks, n_kv_blocks); the online-softmax state
+(m, l, acc) lives in VMEM scratch and persists across the innermost
+kv-block dimension.  Blocks are (BQ, D) / (BK, D) tiles in VMEM — MXU-
+aligned (128 multiples).  Causal and sliding-window masking are applied
+in-kernel from global positions; GQA is expressed in the k/v BlockSpec
+index maps (flat q-head index b*Hq+hq reads kv row b*Hkv + hq//group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 causal: bool, window: int, bq: int, bk: int, nk: int,
+                 kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)              # (BK, D)
+    v = v_ref[0].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _out():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool = True):
+    """q: (B, Hq, Lq, D); k, v: (B, Hkv, Lkv, D).  Returns (B, Hq, Lq, D)."""
+    B, Hq, Lq, D = q.shape
+    _, Hkv, Lkv, _ = k.shape
+    group = Hq // Hkv
+    bq = min(bq, Lq)
+    bk = min(bk, Lkv)
+    assert Lq % bq == 0 and Lkv % bk == 0, "pad sequence to block multiple"
+
+    qf = q.reshape(B * Hq, Lq, D)
+    kf = k.reshape(B * Hkv, Lkv, D)
+    vf = v.reshape(B * Hkv, Lkv, D)
+    nq = Lq // bq
+    nk = Lkv // bk
+
+    def q_map(h, qi, ki):
+        return (h, qi, 0)
+
+    def kv_map(h, qi, ki):
+        b = h // Hq
+        hq = h % Hq
+        return (b * Hkv + hq // group, ki, 0)
+
+    kernel = functools.partial(
+        _attn_kernel, causal=causal, window=window, bq=bq, bk=bk, nk=nk,
+        kv_len=Lkv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), q_map),
+            pl.BlockSpec((1, bk, D), kv_map),
+            pl.BlockSpec((1, bk, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Lq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Lq, D)

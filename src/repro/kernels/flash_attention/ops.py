@@ -1,0 +1,21 @@
+"""Jit'd public wrapper: picks the Pallas kernel on TPU, the blockwise-scan
+jnp twin elsewhere (models/attention.py shares the math)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "use_pallas", "interpret"))
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              use_pallas: bool = True, interpret: bool | None = None):
+    if not use_pallas:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=interpret)

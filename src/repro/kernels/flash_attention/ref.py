@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for flash attention (naive full-matrix softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    B, Hq, Lq, D = q.shape
+    _, Hkv, Lkv, _ = k.shape
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, Lq, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) / jnp.sqrt(D)
+    q_pos = jnp.arange(Lq)[:, None]
+    k_pos = jnp.arange(Lkv)[None, :]
+    mask = jnp.ones((Lq, Lkv), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return out.reshape(B, Hq, Lq, D).astype(q.dtype)

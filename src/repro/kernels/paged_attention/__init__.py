@@ -1,0 +1,3 @@
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.ops import attention

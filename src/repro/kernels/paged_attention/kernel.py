@@ -1,0 +1,104 @@
+"""Paged decode attention Pallas TPU kernel.
+
+The decode-side hot path of the FaaSTube data store: the KV cache lives in
+the elastic pool as fixed-size pages (the pool's 2 MB slabs); a per-sequence
+page table maps logical cache positions to physical pages.  The kernel
+walks each sequence's page list via *scalar prefetch* — the page table is
+consumed by the BlockSpec index_map, so each grid step DMAs exactly one
+physical page from HBM into VMEM (gather and attention fused; the
+host-oriented alternative would materialize a contiguous copy first).
+
+q: (B, Hq, D); k_pages/v_pages: (P, page, Hkv, D); page_table: (B, NP);
+seq_lens: (B,).  Online softmax across the page dimension in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(page_table, seq_lens, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page: int, npages: int,
+                  group: int):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, D) q heads of this kv head
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (page, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = pi * page + jax.lax.broadcasted_iota(jnp.int32, (group, page), 1)
+    mask = pos < seq_lens[b]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(pi == npages - 1)
+    def _out():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, seq_lens, *,
+                    interpret: bool = True):
+    """q: (B, Hq, D); pages: (P, page, Hkv, D); page_table: (B, NP) int32;
+    seq_lens: (B,) int32.  Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    NP = page_table.shape[1]
+    group = Hq // Hkv
+
+    qf = q.reshape(B, Hkv, group, D)
+
+    def q_map(b, h, pi, *_prefetch):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, pi, page_table_ref, seq_lens_ref):
+        return (page_table_ref[b, pi], 0, h, 0)
+
+    kernel = functools.partial(_paged_kernel, page=page, npages=NP,
+                               group=group)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, NP),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D), q_map),
+            pl.BlockSpec((1, page, 1, D), kv_map),
+            pl.BlockSpec((1, page, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype),
+        interpret=interpret,
+    )(page_table, seq_lens, qf, k_pages, v_pages)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,20 @@
+"""Jit'd wrapper for paged decode attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def attention(q, k_pages, v_pages, page_table, seq_lens, *,
+              use_pallas: bool = True, interpret: bool | None = None):
+    if not use_pallas:
+        return paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return paged_attention(q, k_pages, v_pages, page_table, seq_lens,
+                           interpret=interpret)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for paged decode attention: materialize the gathered
+cache, then plain masked softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens):
+    B, Hq, D = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    NP = page_table.shape[1]
+    group = Hq // Hkv
+
+    # gather pages -> contiguous (B, S, Hkv, D)
+    k = k_pages[page_table]                    # (B, NP, page, Hkv, D)
+    v = v_pages[page_table]
+    k = k.reshape(B, NP * page, Hkv, D)
+    v = v.reshape(B, NP * page, Hkv, D)
+
+    qg = q.reshape(B, Hkv, group, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32)) / jnp.sqrt(D)
+    mask = jnp.arange(NP * page)[None] < seq_lens[:, None]      # (B, S)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory / cost / collective analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out FILE]
+
+The 512 placeholder host devices exist ONLY here (set before any jax import,
+since jax locks the device count on first init).  Nothing is allocated:
+inputs are ShapeDtypeStructs; .lower().compile() proves the distribution
+config is coherent and yields the roofline terms.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_cells, get_arch, get_shape
+from repro.distributed.mesh import sharding_for
+from repro.launch.mesh import make_production_mesh
+from repro.models import io
+from repro.models import model as M
+from repro.models import param as PM
+from repro.training.optimizer import OptConfig, opt_pspecs
+from repro.training.train_step import build_train_step, default_accum
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b")
+SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|c64)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {"bf16": 2, "f32": 4, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "c64": 8}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in (per-device) HLO."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        lhs = line.split("=")[0]
+        # result shape annotations live right after '=' on the rhs
+        rhs = line.split("=", 1)[1]
+        sm = SHAPE_RE.search(rhs)
+        if not sm:
+            continue
+        dt, dims = sm.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out[kind] = out.get(kind, 0) + n * DTYPE_BYTES[dt]
+    return out
+
+
+DTYPE_NBYTES = {"bfloat16": 2, "float32": 4, "int8": 1, "int32": 4}
+
+
+def analytic_device_bytes(pspec_tree, rules, mesh) -> int:
+    """Exact per-device residency of a PSpec tree under the cell's rules.
+
+    The CPU backend's memory_analysis over-reports: XLA legalizes bf16 dots
+    to f32 (no native bf16 on CPU) and hoists the converts out of the layer
+    scan, materializing f32 copies of whole weight/cache stacks that a TPU
+    build never allocates.  This analytic number is the ground truth for
+    "does it fit 16 GB" (EXPERIMENTS.md #Dry-run caveat).
+    """
+    import numpy as np
+    from repro.distributed.mesh import spec_for
+    from repro.models.param import is_pspec
+
+    total = 0
+    for p in jax.tree.leaves(pspec_tree, is_leaf=is_pspec):
+        spec = spec_for(p.shape, p.logical, rules, mesh)
+        shards = 1
+        for part in spec:
+            if part is None:
+                continue
+            for ax in ((part,) if isinstance(part, str) else part):
+                shards *= mesh.shape[ax]
+        nbytes = int(np.prod(p.shape)) * DTYPE_NBYTES[jnp.dtype(p.dtype).name]
+        total += nbytes // shards
+    return total
+
+
+def opt_state_dtype(cfg) -> str:
+    from repro.models import param as PM
+    n = PM.count_params(M.model_specs(cfg))
+    return "int8" if n > 50e9 else "f32"
+
+
+def use_w8a16(cfg, shape, mesh) -> bool:
+    """Weight-only int8 for big dense decode: the memory term is weight
+    streaming; halving weight bytes beats 2D sharding, which pays
+    batch-replication psums (mesh.py NOTE / EXPERIMENTS.md §Perf C)."""
+    if shape.kind != "decode" or cfg.n_experts:
+        return False
+    n = PM.count_params(M.model_specs(cfg))
+    return 2 * n / mesh.shape["model"] > 4e9
+
+
+def build_step(cfg, shape, ctx, mesh):
+    if shape.kind == "train":
+        oc = OptConfig(state_dtype=opt_state_dtype(cfg),
+                       schedule=cfg.lr_schedule)
+        return build_train_step(cfg, ctx, oc,
+                                accum=default_accum(shape, mesh, cfg))
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return M.prefill(cfg, ctx, params, batch)
+        return prefill_step
+
+    if use_w8a16(cfg, shape, mesh):
+        from repro.serving.wquant import dequant_tree
+
+        def serve_step_w8(qparams, caches, batch):
+            params = dequant_tree(qparams)
+            return M.decode_step(cfg, ctx, params, caches,
+                                 batch["token"], batch["pos"])
+        return serve_step_w8
+
+    def serve_step(params, caches, batch):
+        return M.decode_step(cfg, ctx, params, caches,
+                             batch["token"], batch["pos"])
+    return serve_step
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False):
+    """Lower + compile one cell; returns the analysis record."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    ctx = M.build_ctx(cfg, shape, mesh)
+
+    pspecs_raw = M.model_specs(cfg)
+    pspecs = pspecs_raw
+    w8 = use_w8a16(cfg, shape, mesh)
+    if w8:
+        from repro.serving.wquant import quant_pspecs
+        pspecs = quant_pspecs(pspecs_raw)
+    p_abs = PM.abstract(pspecs)
+    p_shd = PM.shardings(pspecs, ctx.rules, mesh)
+
+    bspecs = io.batch_pspecs(cfg, shape)
+    b_abs = PM.abstract(bspecs)
+    b_shd = PM.shardings(bspecs, ctx.rules, mesh)
+
+    step = build_step(cfg, shape, ctx, mesh)
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            from repro.distributed.mesh import make_opt_rules
+            ospecs = opt_pspecs(pspecs, opt_state_dtype(cfg))
+            o_abs = PM.abstract(ospecs)
+            o_shd = PM.shardings(
+                ospecs, make_opt_rules(cfg, shape, mesh, ctx.rules), mesh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shd, o_shd, b_shd),
+                out_shardings=(p_shd, o_shd, None),
+                donate_argnums=(0, 1),
+            ).lower(p_abs, o_abs, b_abs)
+        elif shape.kind == "prefill":
+            cspecs = M.cache_pspecs(cfg, shape)
+            c_shd = PM.shardings(cspecs, ctx.rules, mesh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shd, b_shd),
+                out_shardings=(None, c_shd),
+            ).lower(p_abs, b_abs)
+        else:
+            cspecs = M.cache_pspecs(cfg, shape)
+            c_abs = PM.abstract(cspecs)
+            c_shd = PM.shardings(cspecs, ctx.rules, mesh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shd, c_shd, b_shd),
+                out_shardings=(None, c_shd),
+                donate_argnums=(1,),
+            ).lower(p_abs, c_abs, b_abs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    # Loop-aware accounting: XLA's cost_analysis counts while bodies ONCE,
+    # under-reporting a scan-over-layers step by ~n_layers x accum.  The
+    # hlo_analysis walker multiplies body costs by trip counts.
+    from repro.launch.hlo_analysis import analyze
+    loop_aware = analyze(hlo)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": loop_aware["flops"],
+        "traffic_bytes": loop_aware["traffic_bytes"],
+        "collective_bytes": loop_aware["collective_bytes"],
+        "xla_flops_scan_once": cost.get("flops", 0.0) if cost else 0.0,
+        "xla_bytes_scan_once": cost.get("bytes accessed", 0.0) if cost else 0.0,
+        "collective_bytes_scan_once": coll,
+        "params": PM.count_params(pspecs_raw),
+        "w8a16": w8,
+        "analytic_device_bytes": {
+            "params": analytic_device_bytes(pspecs, ctx.rules, mesh),
+            "opt": (analytic_device_bytes(opt_pspecs(pspecs, opt_state_dtype(cfg)),
+                                          ctx.rules, mesh)
+                    if shape.kind == "train" else 0),
+            "caches": (analytic_device_bytes(M.cache_pspecs(cfg, shape),
+                                             ctx.rules, mesh)
+                       if shape.kind == "decode" else 0),
+            "inputs": analytic_device_bytes(bspecs, ctx.rules, mesh),
+        },
+    }
+    if mem is not None:
+        for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            rec[k] = getattr(mem, k, None)
+    return rec, compiled
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    records = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                rec, compiled = lower_cell(arch, shape, multi_pod=mp)
+                print(json.dumps(rec))
+                mem = compiled.memory_analysis()
+                if mem is not None:
+                    print(f"  memory: temp={getattr(mem, 'temp_size_in_bytes', '?')} "
+                          f"args={getattr(mem, 'argument_size_in_bytes', '?')}")
+                records.append(rec)
+            except Exception as e:  # a failure here is a bug in our system
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "error": f"{type(e).__name__}: {e}"}
+                print(json.dumps(rec), file=sys.stderr)
+                records.append(rec)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+    bad = [r for r in records if "error" in r]
+    print(f"\n{len(records) - len(bad)}/{len(records)} cells OK")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

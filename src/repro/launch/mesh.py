@@ -1,0 +1,44 @@
+"""Production mesh factories.
+
+Functions (not module-level constants) so importing this module never touches
+jax device state; the dry-run sets XLA_FLAGS for 512 host devices before any
+jax import, smoke tests see the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_smoke_mesh():
+    """1x1 mesh over whatever single device the test host has."""
+    return _mk((1, 1), ("data", "model"))
+
+
+def make_degraded_mesh(n_failed_hosts: int, *, chips_per_host: int = 4,
+                       multi_pod: bool = False):
+    """Elastic re-mesh after host failures: shrink the data axis.
+
+    v5e has 4 chips/host; losing H hosts removes 4H chips.  We keep the model
+    axis intact (TP groups must stay whole) and shrink the data axis to the
+    largest size that fits the surviving chip count.
+    """
+    total = (2 * 16 * 16 if multi_pod else 16 * 16) - n_failed_hosts * chips_per_host
+    model = 16
+    data = total // model
+    if data < 1:
+        raise ValueError("not enough surviving chips for one model group")
+    if multi_pod and data % 2 == 0:
+        return _mk((2, data // 2, model), ("pod", "data", "model"))
+    return _mk((data, model), ("data", "model"))

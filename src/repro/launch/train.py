@@ -1,0 +1,74 @@
+"""Training launcher:  python -m repro.launch.train --arch <id> [options]
+
+Full-size cells are for real pods; on this CPU container use --smoke to
+run the reduced config (same family, tiny dims) end to end, or --steps N
+with a custom --d-model etc. for laptop-scale runs.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --smoke
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-72b --smoke \
+      --steps 20 --inject-failure 8
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeSpec
+from repro.distributed.fault import FaultPolicy, NodeFailure
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import run_training
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on the local device")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--inject-failure", type=int, default=-1,
+                    help="simulate a host failure at this step (recovery demo)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+        mesh = make_smoke_mesh()
+        shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        shape = ShapeSpec("cli", args.seq, args.batch, "train")
+
+    injector = None
+    if args.inject_failure >= 0:
+        fired = {}
+        def injector(i):
+            if i == args.inject_failure and not fired:
+                fired["x"] = True
+                return NodeFailure(host=1)
+            return None
+
+    oc = OptConfig(schedule=cfg.lr_schedule, total_steps=args.steps,
+                   warmup_steps=max(args.steps // 10, 1))
+    state, losses, stats = run_training(
+        cfg, shape, mesh, steps=args.steps, oc=oc, accum=args.accum,
+        ckpt_dir=args.ckpt_dir, resume=args.resume,
+        policy=FaultPolicy(checkpoint_every=args.checkpoint_every),
+        failure_injector=injector)
+    print(f"done: step={state.step} loss={losses[0]:.3f}->{losses[-1]:.3f} "
+          f"restarts={stats.restarts} failed_hosts={stats.failed_hosts}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,195 @@
+"""Attention: RoPE / M-RoPE, blockwise (online-softmax) attention for
+train/prefill, single-query decode attention over sharded KV.
+
+The blockwise form is the pure-jnp twin of the Pallas flash-attention kernel
+(kernels/flash_attention): same math, scan over KV chunks with a running
+(max, denom, acc) triple, so lowered memory stays O(L*chunk) instead of
+O(L^2).  On TPU the Pallas kernel replaces it; the CPU dry-run lowers this
+path (identical math — see DESIGN.md §Hardware-adaptation).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- RoPE -----
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., L) -> angles (..., L, head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def apply_rotary(x, angles):
+    """x (B, H, L, D); angles broadcastable to (B, 1, L, D//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope(x, positions, theta: float):
+    """Standard RoPE.  positions: (L,) or (B, L)."""
+    ang = rope_angles(positions, x.shape[-1], theta)
+    if ang.ndim == 2:          # (L, half)
+        ang = ang[None, None]
+    else:                      # (B, L, half)
+        ang = ang[:, None]
+    return apply_rotary(x, ang)
+
+
+def mrope_position_ids(seq_len: int, vision_prefix: int, grid_w: int = 32):
+    """Qwen2-VL M-RoPE position ids (3, L): temporal/height/width.
+
+    Vision prefix lives on a (1, P//grid_w, grid_w) grid; text positions all
+    three streams advance together, continuing after the prefix grid max.
+    """
+    idx = jnp.arange(seq_len)
+    in_vis = idx < vision_prefix
+    t = jnp.where(in_vis, 0, idx - vision_prefix + grid_w)
+    h = jnp.where(in_vis, idx // grid_w, idx - vision_prefix + grid_w)
+    w = jnp.where(in_vis, idx % grid_w, idx - vision_prefix + grid_w)
+    return jnp.stack([t, h, w])          # (3, L)
+
+
+def apply_mrope(x, pos3, theta: float, sections=(1, 1, 1)):
+    """M-RoPE: frequency bands split across (t, h, w) position streams.
+
+    pos3: (3, L).  sections: relative band split over head_dim//2 (Qwen2-VL
+    uses 16/24/24 for head_dim 128 — we scale proportionally).
+    """
+    half = x.shape[-1] // 2
+    total = sum(sections)
+    bounds = []
+    acc = 0
+    for s in sections[:-1]:
+        acc += s * half // total
+        bounds.append(acc)
+    band = jnp.zeros((half,), jnp.int32)
+    freq_idx = jnp.arange(half)
+    for b in bounds:
+        band = band + (freq_idx >= b).astype(jnp.int32)
+    ang = jax.vmap(lambda p: rope_angles(p, x.shape[-1], theta))(pos3)  # (3,L,half)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang, 0, -1), band[None, :, None], axis=-1
+    )[..., 0]                              # (L, half)
+    return apply_rotary(x, ang[None, None])
+
+
+# -------------------------------------------- blockwise (flash) attention --
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "chunk", "q_offset", "kv_offset"),
+)
+def blockwise_attention(
+    q, k, v, *, causal: bool = True, window: int = 0,
+    q_offset: int = 0, kv_offset: int = 0, chunk: int = 512,
+):
+    """Online-softmax attention.
+
+    q: (B, Hq, Lq, D); k, v: (B, Hkv, Lkv, D), Hq % Hkv == 0.
+    window > 0 restricts to kv_pos in (q_pos - window, q_pos] (sliding).
+    """
+    B, Hq, Lq, D = q.shape
+    _, Hkv, Lkv, _ = k.shape
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, Lq, D)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    nchunks = -(-Lkv // chunk)
+    pad = nchunks * chunk - Lkv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kc = jnp.moveaxis(k.reshape(B, Hkv, nchunks, chunk, D), 2, 0)
+    vc = jnp.moveaxis(v.reshape(B, Hkv, nchunks, chunk, D), 2, 0)
+
+    q_pos = q_offset + jnp.arange(Lq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, c_i = xs
+        kv_pos = kv_offset + c_i * chunk + jnp.arange(chunk)
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qg, k_i, preferred_element_type=jnp.float32
+        ) * scale
+        mask = kv_pos[None, :] < Lkv                      # padding
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, v_i.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((B, Hkv, group, Lq), NEG_INF, jnp.float32),
+        jnp.zeros((B, Hkv, group, Lq), jnp.float32),
+        jnp.zeros((B, Hkv, group, Lq, D), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (kc, vc, jnp.arange(nchunks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Hq, Lq, D).astype(q.dtype)
+
+
+# ------------------------------------------------------- decode attention --
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
+    """Single-token attention over a (possibly seq-sharded) KV cache.
+
+    q: (B, Hq, 1, D); caches: (B, Hkv, S, D); pos: scalar current position.
+    Lq == 1 so scores are (B, Hq, S) — tiny; no chunking needed.  Reductions
+    over a sharded S turn into psums under SPMD (flash-decoding layout).
+    """
+    B, Hq, _, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, D)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    s = jnp.einsum(
+        "bhgd,bhkd->bhgk", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    kv_pos = jnp.arange(S)
+    mask = kv_pos <= pos
+    if window:
+        mask = mask & (kv_pos > pos - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgk,bhkd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+def kv_update(cache, new, pos, *, mode: str = "masked_where"):
+    """Insert the new token's K or V at ``pos`` in a seq-sharded cache.
+
+    masked_where: pure-elementwise rewrite — partition-friendly on a sharded
+    seq dim (each shard rewrites only its slice; no gather).  dus: plain
+    dynamic_update_slice (baseline; the partitioner may all-gather).
+    """
+    if mode == "dus":
+        return jax.lax.dynamic_update_slice(
+            cache, new.astype(cache.dtype), (0, 0, pos, 0)
+        )
+    S = cache.shape[2]
+    sel = (jnp.arange(S) == pos)[None, None, :, None]
+    return jnp.where(sel, new.astype(cache.dtype), cache)

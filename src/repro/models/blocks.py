@@ -1,0 +1,391 @@
+"""Block assembly: kind keys, per-kind param/cache specs, apply dispatch.
+
+A *kind* is "<mixer>/<ffn>" — e.g. "attn/dense", "mamba/moe", "mlstm/none".
+``block_pattern(cfg)`` names every layer's kind; patterns are periodic so the
+layer stack is stored as (n_units, run_len, ...) stacked params and executed
+as scan-over-units with nested scan-over-runs — HLO stays O(pattern), not
+O(depth), which keeps 66 dry-run compiles tractable (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, _pattern_period
+from repro.distributed.mesh import Rules, constrain
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.param import PSpec, stack
+
+
+@dataclass
+class ModelCtx:
+    cfg: ArchConfig
+    rules: Rules
+    mesh: Any
+    data_axes: tuple[str, ...]
+    fsdp: bool
+    batch_sharded: bool = True
+
+    def cons(self, x, logical):
+        if self.mesh is None:
+            return x
+        return constrain(x, logical, self.rules, self.mesh)
+
+
+# ------------------------------------------------------------ patterns -----
+
+def block_pattern(cfg: ArchConfig) -> list[str]:
+    kinds = []
+    for i in range(cfg.n_layers):
+        if cfg.mixer == "mamba_pattern":
+            mixer = "attn" if i % cfg.attn_every == cfg.attn_offset else "mamba"
+        elif cfg.mixer == "xlstm_pattern":
+            mixer = "slstm" if i % cfg.slstm_every == 0 else "mlstm"
+        elif cfg.local_global_ratio:
+            mixer = (
+                "attn_global"
+                if i % (cfg.local_global_ratio + 1) == cfg.local_global_ratio
+                else "attn_local"
+            )
+        else:
+            mixer = "attn"
+        if mixer in ("mlstm", "slstm"):
+            ffn = "none"
+        elif cfg.n_experts and i % cfg.moe_every == cfg.moe_offset % cfg.moe_every:
+            ffn = "moe"
+        else:
+            ffn = "dense"
+        kinds.append(f"{mixer}/{ffn}")
+    return kinds
+
+
+def enc_pattern(cfg: ArchConfig) -> list[str]:
+    return ["enc_attn/dense"] * cfg.enc_layers
+
+
+@dataclass(frozen=True)
+class StackLayout:
+    runs: tuple[tuple[str, int], ...]        # unit pattern as (kind, run_len)
+    n_units: int
+    rest_runs: tuple[tuple[str, int], ...]   # remainder layers (no unit dim)
+
+
+def _group_runs(kinds: list[str]) -> tuple[tuple[str, int], ...]:
+    runs: list[tuple[str, int]] = []
+    for k in kinds:
+        if runs and runs[-1][0] == k:
+            runs[-1] = (k, runs[-1][1] + 1)
+        else:
+            runs.append((k, 1))
+    return tuple(runs)
+
+
+def stack_layout(kinds: list[str], period: int) -> StackLayout:
+    n_units = len(kinds) // period
+    unit = kinds[:period]
+    for i, k in enumerate(kinds[: n_units * period]):
+        assert k == unit[i % period], "pattern is not periodic"
+    rest = kinds[n_units * period:]
+    return StackLayout(_group_runs(unit), n_units, _group_runs(rest))
+
+
+def layout_for(cfg: ArchConfig, kinds: list[str]) -> StackLayout:
+    period = _pattern_period(cfg)
+    return stack_layout(kinds, period)
+
+
+# --------------------------------------------------------- kind metadata ---
+
+def kind_meta(cfg: ArchConfig, kind: str) -> dict:
+    mixer, ffn = kind.split("/")
+    meta = {"mixer": mixer, "ffn": ffn, "causal": mixer != "enc_attn",
+            "window": 0, "theta": cfg.rope_theta, "cross": mixer == "dec_attn"}
+    if mixer == "attn_local":
+        meta["window"] = cfg.window_size
+    if mixer == "attn_global" and cfg.rope_theta_global:
+        meta["theta"] = cfg.rope_theta_global
+    return meta
+
+
+# -------------------------------------------------------------- specs ------
+
+def attn_specs(cfg: ArchConfig, cross: bool = False):
+    D, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    prefix = "c" if cross else ""
+    s = {
+        f"{prefix}wq": PSpec((D, H, hd), ("embed", "heads", None), fan_in=D),
+        f"{prefix}wk": PSpec((D, Kv, hd), ("embed", "kv_heads", None),
+                             fan_in=D),
+        f"{prefix}wv": PSpec((D, Kv, hd), ("embed", "kv_heads", None),
+                             fan_in=D),
+        f"{prefix}wo": PSpec((H, hd, D), ("heads", None, "embed"),
+                             fan_in=H * hd),
+    }
+    if cfg.qkv_bias and not cross:
+        s["bq"] = PSpec((H, hd), ("heads", None), init="zeros")
+        s["bk"] = PSpec((Kv, hd), ("kv_heads", None), init="zeros")
+        s["bv"] = PSpec((Kv, hd), ("kv_heads", None), init="zeros")
+    return s
+
+
+def _norm_specs(cfg: ArchConfig):
+    return L.layernorm_spec(cfg.d_model) if cfg.family == "encdec" \
+        else L.rmsnorm_spec(cfg.d_model)
+
+
+def _norm(cfg: ArchConfig, x, p):
+    return L.layernorm(x, p, cfg.norm_eps) if cfg.family == "encdec" \
+        else L.rmsnorm(x, p, cfg.norm_eps)
+
+
+def _scale_residual_outputs(cfg: ArchConfig, s: dict) -> dict:
+    """Depth-scaled init (GPT-2 / MiniCPM recipe): every projection that
+    writes into the residual stream gets std *= 1/sqrt(2L), so the
+    stream's variance stays O(1) with depth instead of growing linearly
+    (measured: 6-layer stack-out std 47 -> ~1, embed grad norm 25k -> ~1;
+    without this the global-norm clip silently froze training)."""
+    import dataclasses as _dc
+    k = (2.0 * max(cfg.n_layers, 1)) ** -0.5
+    OUT = {"wo", "cwo", "out", "ffn_down"}
+
+    def walk(tree):
+        out = {}
+        for name, v in tree.items():
+            if isinstance(v, dict):
+                out[name] = walk(v)
+            elif name in OUT and v.init == "normal":
+                out[name] = _dc.replace(v, scale=v.scale * k)
+            else:
+                out[name] = v
+        return out
+    return walk(s)
+
+
+def block_specs(cfg: ArchConfig, kind: str):
+    meta = kind_meta(cfg, kind)
+    s: dict = {}
+    mixer = meta["mixer"]
+    if mixer in ("attn", "attn_local", "attn_global", "enc_attn", "dec_attn"):
+        s["ln1"] = _norm_specs(cfg)
+        s["attn"] = attn_specs(cfg)
+        if meta["cross"]:
+            s["ln_x"] = _norm_specs(cfg)
+            s["xattn"] = attn_specs(cfg, cross=True)
+    elif mixer == "mamba":
+        s["ln1"] = _norm_specs(cfg)
+        s["mamba"] = mamba_mod.mamba_specs(cfg)
+    elif mixer == "mlstm":
+        s["ln1"] = _norm_specs(cfg)
+        s["mlstm"] = xlstm_mod.mlstm_specs(cfg)
+    elif mixer == "slstm":
+        s["ln1"] = _norm_specs(cfg)
+        s["slstm"] = xlstm_mod.slstm_specs(cfg)
+    else:
+        raise ValueError(mixer)
+    if meta["ffn"] == "dense":
+        s["ln2"] = _norm_specs(cfg)
+        s["mlp"] = L.mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    elif meta["ffn"] == "moe":
+        s["ln2"] = _norm_specs(cfg)
+        s["moe"] = moe_mod.moe_specs(cfg)
+    return _scale_residual_outputs(cfg, s)
+
+
+def block_cache_shapes(cfg: ArchConfig, kind: str, batch: int, cache_len: int,
+                       enc_len: int = 0):
+    """(shape, dtype, logical) per cache leaf for decode-mode lowering."""
+    meta = kind_meta(cfg, kind)
+    mixer = meta["mixer"]
+    hd = cfg.resolved_head_dim
+    Kv = cfg.n_kv_heads
+    kv_logical = ("batch", None, "kv_seq", None)
+    cd = cfg.cache_jdtype
+    if mixer in ("attn", "attn_global", "dec_attn"):
+        c = {
+            "k": ((batch, Kv, cache_len, hd), cd, kv_logical),
+            "v": ((batch, Kv, cache_len, hd), cd, kv_logical),
+        }
+        if meta["cross"]:
+            c["ck"] = ((batch, Kv, enc_len, hd), cd, kv_logical)
+            c["cv"] = ((batch, Kv, enc_len, hd), cd, kv_logical)
+        return c
+    if mixer == "attn_local":
+        w = min(cfg.window_size, cache_len)
+        return {
+            "k": ((batch, Kv, w, hd), cd, kv_logical),
+            "v": ((batch, Kv, w, hd), cd, kv_logical),
+        }
+    if mixer == "mamba":
+        shapes = mamba_mod.mamba_state_shapes(cfg, batch)
+        logical = {"conv": ("batch", None, "state_inner"),
+                   "ssm": ("batch", "state_inner", None)}
+        return {k: (v[0], v[1], logical[k]) for k, v in shapes.items()}
+    if mixer == "mlstm":
+        shapes = xlstm_mod.mlstm_state_shapes(cfg, batch)
+        # C is (B, H, dh_qk, dh_v): the v dim shards over "model" so the
+        # per-step outer-product update and q^T C readout stay chip-local
+        logical = {"C": ("batch", None, None, "head_v"),
+                   "n": ("batch", None, None), "m": ("batch", None)}
+        return {k: (v[0], v[1], logical[k]) for k, v in shapes.items()}
+    if mixer == "slstm":
+        shapes = xlstm_mod.slstm_state_shapes(cfg, batch)
+        return {k: (v[0], v[1], ("batch", None, None)) for k, v in shapes.items()}
+    raise ValueError(mixer)
+
+
+# -------------------------------------------------------------- apply ------
+
+def _proj_qkv(cfg, p, x, prefix=""):
+    q = jnp.einsum("bld,dhk->bhlk", x, p[f"{prefix}wq"])
+    k = jnp.einsum("bld,dhk->bhlk", x, p[f"{prefix}wk"])
+    v = jnp.einsum("bld,dhk->bhlk", x, p[f"{prefix}wv"])
+    if cfg.qkv_bias and not prefix:
+        q = q + p["bq"][None, :, None, :]
+        k = k + p["bk"][None, :, None, :]
+        v = v + p["bv"][None, :, None, :]
+    return q, k, v
+
+
+def _rope(cfg, meta, q, k, positions):
+    if cfg.rope == "rope":
+        q = attn_mod.apply_rope(q, positions, meta["theta"])
+        k = attn_mod.apply_rope(k, positions, meta["theta"])
+    elif cfg.rope == "mrope":
+        pos3 = jax.vmap(
+            lambda i: _mrope_at(cfg, i), out_axes=1
+        )(positions) if positions.ndim == 1 else positions
+        q = attn_mod.apply_mrope(q, pos3, meta["theta"])
+        k = attn_mod.apply_mrope(k, pos3, meta["theta"])
+    return q, k
+
+
+def _mrope_at(cfg, idx):
+    gw = 32
+    P = cfg.vision_prefix
+    in_vis = idx < P
+    t = jnp.where(in_vis, 0, idx - P + gw)
+    h = jnp.where(in_vis, idx // gw, idx - P + gw)
+    w = jnp.where(in_vis, idx % gw, idx - P + gw)
+    return jnp.stack([t, h, w])
+
+
+def _attn_apply(cfg, ctx, meta, p, x, *, mode, cache, pos, enc_out):
+    B, Lq, D = x.shape
+    h = _norm(cfg, x, p["ln1"])
+    ap = p["attn"]
+    q, k, v = _proj_qkv(cfg, ap, h)
+    q = ctx.cons(q, ("batch", "heads", "seq", None))
+    new_cache = cache
+
+    if mode in ("train", "prefill"):
+        positions = jnp.arange(Lq)
+        q, k = _rope(cfg, meta, q, k, positions)
+        out = attn_mod.blockwise_attention(
+            q, k, v, causal=meta["causal"], window=meta["window"])
+        if mode == "prefill":
+            if meta["window"]:
+                # circular-slot arrangement: token p lives at slot p % W, so
+                # the last W tokens are stored rotated by Lq % W
+                w = min(meta["window"], Lq)
+                kc = jnp.roll(k[:, :, Lq - w:], Lq % w, axis=2)
+                vc = jnp.roll(v[:, :, Lq - w:], Lq % w, axis=2)
+            else:
+                kc, vc = k, v
+            new_cache = {
+                "k": ctx.cons(kc.astype(cfg.cache_jdtype), ("batch", None, "kv_seq", None)),
+                "v": ctx.cons(vc.astype(cfg.cache_jdtype), ("batch", None, "kv_seq", None)),
+            }
+    else:  # decode
+        positions = jnp.full((1,), pos)
+        q, k = _rope(cfg, meta, q, k, positions)
+        if meta["window"]:
+            W = cache["k"].shape[2]
+            slot = pos % W
+            ck = attn_mod.kv_update(cache["k"], k, slot)
+            cv = attn_mod.kv_update(cache["v"], v, slot)
+            # circular window: once pos >= W every slot is live
+            eff_pos = jnp.minimum(pos, W - 1)
+            out = attn_mod.decode_attention(q, ck, cv, eff_pos)
+        else:
+            ck = attn_mod.kv_update(cache["k"], k, pos)
+            cv = attn_mod.kv_update(cache["v"], v, pos)
+            out = attn_mod.decode_attention(q, ck, cv, pos)
+        new_cache = dict(cache, k=ck, v=cv)
+
+    y = jnp.einsum("bhlk,hkd->bld", out, ap["wo"])
+    x = x + y
+
+    if meta["cross"]:
+        h = _norm(cfg, x, p["ln_x"])
+        q = jnp.einsum("bld,dhk->bhlk", h, p["xattn"]["cwq"])
+        if mode == "prefill":
+            ck = jnp.einsum("bld,dhk->bhlk", enc_out, p["xattn"]["cwk"])
+            cv = jnp.einsum("bld,dhk->bhlk", enc_out, p["xattn"]["cwv"])
+            new_cache = dict(new_cache,
+                             ck=ck.astype(cfg.cache_jdtype),
+                             cv=cv.astype(cfg.cache_jdtype))
+            out = attn_mod.blockwise_attention(q, ck, cv, causal=False)
+        elif mode == "decode":
+            S_enc = cache["ck"].shape[2]
+            out = attn_mod.decode_attention(q, cache["ck"], cache["cv"], S_enc - 1)
+        else:  # train: enc_out available
+            ck = jnp.einsum("bld,dhk->bhlk", enc_out, p["xattn"]["cwk"])
+            cv = jnp.einsum("bld,dhk->bhlk", enc_out, p["xattn"]["cwv"])
+            out = attn_mod.blockwise_attention(q, ck, cv, causal=False)
+        y = jnp.einsum("bhlk,hkd->bld", out, p["xattn"]["cwo"])
+        x = x + y
+    return x, new_cache
+
+
+def apply_block(cfg, ctx: ModelCtx, kind: str, p, x, *, mode: str,
+                cache=None, pos=0, enc_out=None):
+    """Returns (x, new_cache, aux)."""
+    meta = kind_meta(cfg, kind)
+    mixer = meta["mixer"]
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache if cache is not None else {}
+
+    if mixer in ("attn", "attn_local", "attn_global", "enc_attn", "dec_attn"):
+        x, new_cache = _attn_apply(cfg, ctx, meta, p, x,
+                                   mode=mode, cache=cache, pos=pos, enc_out=enc_out)
+    elif mixer == "mamba":
+        h = _norm(cfg, x, p["ln1"])
+        state = cache if mode == "decode" else None
+        y, st = mamba_mod.mamba_forward(h, p["mamba"], cfg, state=state)
+        x = x + y
+        new_cache = st if mode in ("prefill", "decode") else {}
+    elif mixer == "mlstm":
+        h = _norm(cfg, x, p["ln1"])
+        state = cache if mode == "decode" else None
+        y, st = xlstm_mod.mlstm_forward(h, p["mlstm"], cfg, state=state)
+        x = x + y
+        new_cache = st if mode in ("prefill", "decode") else {}
+    elif mixer == "slstm":
+        h = _norm(cfg, x, p["ln1"])
+        state = cache if mode == "decode" else None
+        y, st = xlstm_mod.slstm_forward(h, p["slstm"], cfg, state=state)
+        x = x + y
+        new_cache = st if mode in ("prefill", "decode") else {}
+
+    if meta["ffn"] == "dense":
+        h = _norm(cfg, x, p["ln2"])
+        x = x + L.mlp(h, p["mlp"], cfg.mlp_type)
+    elif meta["ffn"] == "moe":
+        h = _norm(cfg, x, p["ln2"])
+        y, aux_moe = moe_mod.moe_block(
+            h, p["moe"], cfg, ctx.mesh, rules=ctx.rules,
+            data_axes=ctx.data_axes, batch_sharded=ctx.batch_sharded)
+        x = x + y
+        aux = aux + aux_moe
+
+    x = ctx.cons(x, ("batch", "seq", "act_embed"))
+    if mode == "train":
+        new_cache = {}
+    return x, new_cache, aux

@@ -1,0 +1,57 @@
+"""Input specs per (arch, shape): ShapeDtypeStruct stand-ins for every model
+input — weak-type-correct, shardable, no device allocation.  Used by the
+dry-run, the data pipeline (real arrays of the same shapes) and the smoke
+tests (reduced dims).
+"""
+from __future__ import annotations
+
+import zlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.param import PSpec
+from repro.models import param as PM
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """PSpec tree for the step inputs (excluding params / caches)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {
+            "token": PSpec((B, 1), ("batch", None), jnp.int32, "zeros"),
+            "pos": PSpec((), (), jnp.int32, "zeros"),
+        }
+    if cfg.family == "encdec":
+        return {
+            "frames": PSpec((B, S // 2, cfg.d_model),
+                            ("batch", "seq", None), jnp.bfloat16),
+            "tokens": PSpec((B, S // 2), ("batch", "seq"), jnp.int32, "zeros"),
+        }
+    specs = {"tokens": PSpec((B, S), ("batch", "seq"), jnp.int32, "zeros")}
+    if cfg.vision_prefix:
+        specs["vision_embeds"] = PSpec(
+            (B, cfg.vision_prefix, cfg.d_model),
+            ("batch", "seq", None), jnp.bfloat16)
+    return specs
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct tree for jit(...).lower(**input_specs...)."""
+    return PM.abstract(batch_pspecs(cfg, shape))
+
+
+def synthetic_batch(cfg: ArchConfig, shape: ShapeSpec, key):
+    """Real arrays matching batch_pspecs (synthetic tokens / embeddings)."""
+    specs = batch_pspecs(cfg, shape)
+    out = {}
+    for name, p in specs.items():
+        k = jax.random.fold_in(key, zlib.crc32(name.encode()) % (2**31))
+        if p.dtype == jnp.int32 and p.shape:
+            out[name] = jax.random.randint(k, p.shape, 0, cfg.vocab_size, jnp.int32)
+        elif p.dtype == jnp.int32:
+            out[name] = jnp.zeros(p.shape, jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, p.shape, jnp.float32).astype(p.dtype)
+    return out

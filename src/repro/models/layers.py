@@ -1,0 +1,110 @@
+"""Norms, MLP variants, embeddings, logits — shared across architectures."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import PSpec
+
+
+# ------------------------------------------------------------- norms -------
+
+def rmsnorm_spec(d: int):
+    return {"scale": PSpec((d,), (None,), jnp.float32, "ones")}
+
+
+def rmsnorm(x, p, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def layernorm_spec(d: int):
+    return {
+        "scale": PSpec((d,), (None,), jnp.float32, "ones"),
+        "bias": PSpec((d,), (None,), jnp.float32, "zeros"),
+    }
+
+
+def layernorm(x, p, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- MLPs -------
+
+def mlp_specs(d_model: int, d_ff: int, mlp_type: str):
+    """MLP weights use the "embed_mlp" logical for their d_model dim:
+    by default it mirrors "embed", but big-dense decode shards it over
+    the data axes too (2D weight sharding of the ~80% of params that
+    live in the MLP) without touching the attention layout."""
+    if mlp_type == "gated_silu":
+        return {
+            "wi_gate": PSpec((d_model, d_ff), ("embed_mlp", "mlp")),
+            "wi_up": PSpec((d_model, d_ff), ("embed_mlp", "mlp")),
+            "wo": PSpec((d_ff, d_model), ("mlp", "embed_mlp")),
+        }
+    if mlp_type in ("squared_relu", "gelu"):
+        return {
+            "wi": PSpec((d_model, d_ff), ("embed_mlp", "mlp")),
+            "wo": PSpec((d_ff, d_model), ("mlp", "embed_mlp")),
+        }
+    raise ValueError(mlp_type)
+
+
+def mlp(x, p, mlp_type: str):
+    if mlp_type == "gated_silu":
+        h = jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    elif mlp_type == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(x @ p["wi"])
+    else:
+        raise ValueError(mlp_type)
+    return h @ p["wo"]
+
+
+# -------------------------------------------------- embeddings / logits ----
+
+def embedding_specs(vocab: int, d_model: int, tie: bool):
+    specs = {"table": PSpec((vocab, d_model), ("vocab", "embed"), scale=1.0)}
+    if not tie:
+        specs["lm_head"] = PSpec((d_model, vocab), ("embed", "vocab"))
+    return specs
+
+
+def embed_lookup(ids, p, scale_by_dim: bool = False):
+    x = jnp.take(p["table"], ids, axis=0)
+    if scale_by_dim:
+        x = x * jnp.sqrt(jnp.array(p["table"].shape[-1], x.dtype))
+    return x
+
+
+def logits_out(x, p):
+    if "lm_head" in p:
+        return jnp.einsum(
+            "bsd,dv->bsv", x, p["lm_head"], preferred_element_type=jnp.float32
+        )
+    return jnp.einsum(
+        "bsd,vd->bsv", x, p["table"], preferred_element_type=jnp.float32
+    )
+
+
+def sinusoidal_positions(length: int, d_model: int, offset: int = 0):
+    """Whisper-style fixed sinusoidal absolute embedding (computed, no params)."""
+    pos = jnp.arange(offset, offset + length, dtype=jnp.float32)[:, None]
+    half = d_model // 2
+    inv = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10_000.0) / max(half - 1, 1)))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoid_at(pos, d_model: int):
+    """Single-position sinusoidal embedding; pos may be traced (decode)."""
+    half = d_model // 2
+    inv = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10_000.0) / max(half - 1, 1)))
+    ang = jnp.asarray(pos, jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,122 @@
+"""Mamba (S6 selective SSM) mixer — TPU-adapted chunked formulation.
+
+The GPU reference implementation materializes (B, L, d_inner, d_state)
+discretized transition tensors (a fused CUDA scan).  That does not map to
+TPU: we instead stream the sequence through fixed-size chunks — every
+projection, the causal depthwise conv, and the state recurrence happen
+*inside* a checkpointed chunk body, so peak activation memory is
+O(B * Q * d_inner) per chunk plus one carried (B, d_inner, d_state) state
+(the same HBM->VMEM blocking idea our Pallas kernels use; see DESIGN.md
+§Hardware-adaptation).  Decode is the Q=1 special case carrying
+(conv_tail, ssm_state) — those states live in the elastic pool when served.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.param import PSpec
+
+
+def mamba_specs(cfg: ArchConfig):
+    D, N = cfg.d_model, cfg.d_state
+    din = cfg.d_inner
+    dtr = max(D // 16, 1)
+    return {
+        "in_x": PSpec((D, din), ("embed", "state_inner")),
+        "in_z": PSpec((D, din), ("embed", "state_inner")),
+        "conv_w": PSpec((cfg.d_conv, din), ("conv", "state_inner"), scale=1.0),
+        "conv_b": PSpec((din,), ("state_inner",), init="zeros"),
+        "w_dt": PSpec((din, dtr), ("state_inner", None)),
+        "dt_proj": PSpec((dtr, din), (None, "state_inner")),
+        "dt_bias": PSpec((din,), ("state_inner",), jnp.float32, "zeros"),
+        "w_B": PSpec((din, N), ("state_inner", None)),
+        "w_C": PSpec((din, N), ("state_inner", None)),
+        "A_log": PSpec((din, N), ("state_inner", None), jnp.float32, "s4d_log"),
+        "D_skip": PSpec((din,), ("state_inner",), jnp.float32, "ones"),
+        "out": PSpec((din, D), ("state_inner", "embed")),
+    }
+
+
+def mamba_state_shapes(cfg: ArchConfig, batch: int):
+    """Decode-time carried state: (conv tail, ssm state)."""
+    din = cfg.d_inner
+    return {
+        "conv": ((batch, cfg.d_conv - 1, din), cfg.cache_jdtype),
+        "ssm": ((batch, din, cfg.d_state), jnp.float32),
+    }
+
+
+def _chunk_step(p, h, x_t):
+    """One recurrence step.  x_t: (B, din) post-conv activations."""
+    dt = jax.nn.softplus(
+        (x_t @ p["w_dt"]) @ p["dt_proj"] + p["dt_bias"]
+    ).astype(jnp.float32)                                   # (B, din)
+    Bm = (x_t @ p["w_B"]).astype(jnp.float32)               # (B, N)
+    Cm = (x_t @ p["w_C"]).astype(jnp.float32)               # (B, N)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (din, N)
+    dA = jnp.exp(dt[..., None] * A[None])                   # (B, din, N)
+    dBx = dt[..., None] * Bm[:, None, :] * x_t.astype(jnp.float32)[..., None]
+    h = dA * h + dBx                                        # (B, din, N)
+    y = jnp.einsum("bdn,bn->bd", h, Cm)                     # (B, din)
+    y = y + p["D_skip"] * x_t.astype(jnp.float32)
+    return h, y.astype(x_t.dtype)
+
+
+def _conv_chunk(x, tail, w, b):
+    """Causal depthwise conv over one chunk; returns (out, new_tail).
+
+    x: (B, Q, din); tail: (B, d_conv-1, din)."""
+    K = w.shape[0]
+    xp = jnp.concatenate([tail, x], axis=1)                  # (B, Q+K-1, din)
+    Q = x.shape[1]
+    out = sum(xp[:, j : j + Q] * w[j] for j in range(K)) + b
+    return out, xp[:, -(K - 1):]
+
+
+def mamba_forward(x, p, cfg: ArchConfig, *, chunk: int = 64, state=None):
+    """x: (B, L, D) -> (y, final_state).  L must be a multiple of chunk
+    (or 1 for decode)."""
+    B, L, D = x.shape
+    din = cfg.d_inner
+
+    if state is None:
+        state = {
+            "conv": jnp.zeros((B, cfg.d_conv - 1, din), x.dtype),
+            "ssm": jnp.zeros((B, din, cfg.d_state), jnp.float32),
+        }
+
+    if L == 1:  # decode fast-path (no scan machinery)
+        xz = x[:, 0] @ p["in_x"]
+        z = x[:, 0] @ p["in_z"]
+        conv_out, new_tail = _conv_chunk(xz[:, None], state["conv"], p["conv_w"], p["conv_b"])
+        xa = jax.nn.silu(conv_out[:, 0])
+        h, y = _chunk_step(p, state["ssm"], xa)
+        out = (y * jax.nn.silu(z)) @ p["out"]
+        return out[:, None], {"conv": new_tail, "ssm": h}
+
+    chunk = min(chunk, L)
+    assert L % chunk == 0, (L, chunk)
+    xs = jnp.moveaxis(x.reshape(B, L // chunk, chunk, D), 1, 0)
+
+    @jax.checkpoint
+    def chunk_body(carry, x_c):
+        h, tail = carry
+        xz = x_c @ p["in_x"]                                 # (B, Q, din)
+        z = x_c @ p["in_z"]
+        conv_out, tail = _conv_chunk(xz, tail, p["conv_w"], p["conv_b"])
+        xa = jax.nn.silu(conv_out)
+
+        def step(h, xa_t):
+            h, y = _chunk_step(p, h, xa_t)
+            return h, y
+
+        h, ys = jax.lax.scan(step, h, jnp.moveaxis(xa, 1, 0))
+        ys = jnp.moveaxis(ys, 0, 1)                          # (B, Q, din)
+        out_c = (ys * jax.nn.silu(z)) @ p["out"]             # (B, Q, D)
+        return (h, tail), out_c
+
+    (h, tail), outs = jax.lax.scan(chunk_body, (state["ssm"], state["conv"]), xs)
+    y = jnp.moveaxis(outs, 0, 1).reshape(B, L, D)
+    return y, {"conv": tail, "ssm": h}

@@ -1,0 +1,251 @@
+"""Model facade: param specs, stacked-block execution, train loss,
+prefill and decode entry points — one code path for all 10 architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed.mesh import Rules, data_axes, make_rules, mesh_axis_size
+from repro.models import layers as L
+from repro.models import param as PM
+from repro.models.blocks import (
+    ModelCtx,
+    StackLayout,
+    _norm,
+    _norm_specs,
+    apply_block,
+    block_cache_shapes,
+    block_pattern,
+    block_specs,
+    enc_pattern,
+    layout_for,
+)
+from repro.models.param import PSpec, stack
+
+
+# ----------------------------------------------------------- contexts ------
+
+def build_ctx(cfg: ArchConfig, shape: ShapeSpec, mesh) -> ModelCtx:
+    rules = make_rules(cfg, shape, mesh)
+    da = data_axes(mesh)
+    dp = mesh_axis_size(mesh, da)
+    return ModelCtx(
+        cfg=cfg,
+        rules=rules,
+        mesh=mesh,
+        data_axes=da,
+        fsdp=shape.is_training,
+        batch_sharded=shape.global_batch % dp == 0,
+    )
+
+
+# -------------------------------------------------------------- specs ------
+
+def _stack_specs(cfg: ArchConfig, layout: StackLayout):
+    units = [
+        stack(stack(block_specs(cfg, k), rl, "stack"), layout.n_units, "layers")
+        for k, rl in layout.runs
+    ]
+    rest = [stack(block_specs(cfg, k), rl, "stack") for k, rl in layout.rest_runs]
+    return {"units": units, "rest": rest}
+
+
+def model_specs(cfg: ArchConfig):
+    specs = {
+        "embed": L.embedding_specs(cfg.padded_vocab, cfg.d_model, cfg.tie_embeddings),
+        "ln_f": _norm_specs(cfg),
+        "blocks": _stack_specs(cfg, layout_for(cfg, block_pattern(cfg))),
+    }
+    if cfg.enc_layers:
+        specs["enc_blocks"] = _stack_specs(
+            cfg, stack_layout_enc(cfg))
+        specs["enc_ln_f"] = _norm_specs(cfg)
+    return specs
+
+
+def stack_layout_enc(cfg: ArchConfig) -> StackLayout:
+    from repro.models.blocks import stack_layout
+    return stack_layout(enc_pattern(cfg), 1)
+
+
+def abstract_params(cfg: ArchConfig):
+    return PM.abstract(model_specs(cfg))
+
+
+def init_params(cfg: ArchConfig, key):
+    return PM.initialize(model_specs(cfg), key)
+
+
+def param_shardings(cfg: ArchConfig, rules: Rules, mesh):
+    return PM.shardings(model_specs(cfg), rules, mesh)
+
+
+# ----------------------------------------------------- cache pspecs --------
+
+def _cache_pspecs_for_kind(cfg, kind, batch, cache_len, enc_len):
+    shapes = block_cache_shapes(cfg, kind, batch, cache_len, enc_len)
+    return {
+        k: PSpec(shp, logical, dtype, "zeros")
+        for k, (shp, dtype, logical) in shapes.items()
+    }
+
+
+def cache_pspecs(cfg: ArchConfig, shape: ShapeSpec):
+    """PSpec tree for the decode-time cache (matches blocks structure)."""
+    B = shape.global_batch
+    if cfg.enc_layers:
+        cache_len = shape.seq_len // 2
+        enc_len = shape.seq_len // 2
+    else:
+        cache_len = shape.seq_len
+        enc_len = 0
+    layout = layout_for(cfg, block_pattern(cfg))
+    units = [
+        stack(stack(_cache_pspecs_for_kind(cfg, k, B, cache_len, enc_len),
+                    rl, "stack"), layout.n_units, "layers")
+        for k, rl in layout.runs
+    ]
+    rest = [
+        stack(_cache_pspecs_for_kind(cfg, k, B, cache_len, enc_len), rl, "stack")
+        for k, rl in layout.rest_runs
+    ]
+    return {"units": units, "rest": rest}
+
+
+def init_cache(cfg: ArchConfig, shape: ShapeSpec):
+    return PM.initialize(cache_pspecs(cfg, shape), jax.random.key(0))
+
+
+# ----------------------------------------------------------- execution -----
+
+def _empty_caches(layout: StackLayout):
+    return {"units": [() for _ in layout.runs],
+            "rest": [() for _ in layout.rest_runs]}
+
+
+def apply_stack(cfg, ctx, layout: StackLayout, bp, x, *, mode: str,
+                caches=None, pos=0, enc_out=None):
+    """Run the block stack.  Returns (x, new_caches, aux)."""
+    if caches is None or mode != "decode":
+        in_caches = _empty_caches(layout)
+    else:
+        in_caches = caches
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def make_run_body(kind):
+        def run_body(carry, xs):
+            x2, a2 = carry
+            p_i, c_i = xs
+            cache_in = c_i if mode == "decode" else None
+            x2, nc, da = apply_block(cfg, ctx, kind, p_i, x2, mode=mode,
+                                     cache=cache_in, pos=pos, enc_out=enc_out)
+            if mode == "train":
+                nc = ()
+            return (x2, a2 + da), nc
+        return run_body
+
+    def unit_body(carry, xs):
+        x1, a1 = carry
+        ps, cs = xs
+        new_cs = []
+        for (kind, rl), p_r, c_r in zip(layout.runs, ps, cs):
+            (x1, a1), ncs = jax.lax.scan(
+                make_run_body(kind), (x1, a1), (p_r, c_r))
+            new_cs.append(ncs)
+        return (x1, a1), new_cs
+
+    body = jax.checkpoint(unit_body) if mode == "train" else unit_body
+    (x, aux), new_unit_caches = jax.lax.scan(
+        body, (x, aux0), (bp["units"], in_caches["units"]))
+
+    new_rest = []
+    for (kind, rl), p_r, c_r in zip(layout.rest_runs, bp["rest"], in_caches["rest"]):
+        (x, aux), ncs = jax.lax.scan(make_run_body(kind), (x, aux), (p_r, c_r))
+        new_rest.append(ncs)
+
+    new_caches = {"units": new_unit_caches, "rest": new_rest}
+    if mode == "train":
+        new_caches = None
+    return x, new_caches, aux
+
+
+# ------------------------------------------------------------ embedding ----
+
+def _embed_decoder_input(cfg, ctx, params, tokens, *, pos_offset=0,
+                         vision_embeds=None):
+    x = L.embed_lookup(tokens, params["embed"], scale_by_dim=cfg.tie_embeddings)
+    if cfg.family == "encdec":
+        x = x + L.sinusoidal_positions(
+            tokens.shape[1], cfg.d_model, offset=pos_offset).astype(x.dtype)
+    if cfg.vision_prefix and vision_embeds is not None:
+        x = jnp.concatenate(
+            [vision_embeds.astype(x.dtype), x[:, cfg.vision_prefix:]], axis=1)
+    return ctx.cons(x, ("batch", "seq", "act_embed"))
+
+
+def _run_encoder(cfg, ctx, params, frames):
+    x = frames + L.sinusoidal_positions(
+        frames.shape[1], cfg.d_model).astype(frames.dtype)
+    layout = stack_layout_enc(cfg)
+    x, _, _ = apply_stack(cfg, ctx, layout, params["enc_blocks"], x, mode="train")
+    return _norm(cfg, x, params["enc_ln_f"])
+
+
+# ------------------------------------------------------------- entries -----
+
+def loss_fn(cfg: ArchConfig, ctx: ModelCtx, params, batch):
+    """Mean next-token cross-entropy (+ MoE aux)."""
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _run_encoder(cfg, ctx, params, batch["frames"])
+        tokens = batch["tokens"]
+    else:
+        tokens = batch["tokens"]
+    x = _embed_decoder_input(cfg, ctx, params, tokens,
+                             vision_embeds=batch.get("vision_embeds"))
+    layout = layout_for(cfg, block_pattern(cfg))
+    x, _, aux = apply_stack(cfg, ctx, layout, params["blocks"], x,
+                            mode="train", enc_out=enc_out)
+    x = _norm(cfg, x, params["ln_f"])
+    logits = L.logits_out(x, params["embed"])            # (B, S, V) f32
+    logits = ctx.cons(logits, ("batch", "seq", "vocab"))
+
+    tgt = tokens[:, 1:]
+    lg = logits[:, :-1]
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    xent = (lse - ll).mean()
+    loss = xent + 0.01 * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+def prefill(cfg: ArchConfig, ctx: ModelCtx, params, batch):
+    """Returns (last-position logits (B, V), caches)."""
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _run_encoder(cfg, ctx, params, batch["frames"])
+    tokens = batch["tokens"]
+    x = _embed_decoder_input(cfg, ctx, params, tokens,
+                             vision_embeds=batch.get("vision_embeds"))
+    layout = layout_for(cfg, block_pattern(cfg))
+    x, caches, _ = apply_stack(cfg, ctx, layout, params["blocks"], x,
+                               mode="prefill", enc_out=enc_out)
+    x = _norm(cfg, x[:, -1:], params["ln_f"])
+    logits = L.logits_out(x, params["embed"])[:, 0]
+    return logits, caches
+
+
+def decode_step(cfg: ArchConfig, ctx: ModelCtx, params, caches, token, pos):
+    """One decode step.  token: (B, 1) int32; pos: scalar position."""
+    x = L.embed_lookup(token, params["embed"], scale_by_dim=cfg.tie_embeddings)
+    if cfg.family == "encdec":
+        x = x + L.sinusoid_at(pos, cfg.d_model).astype(x.dtype)[None, None]
+    x = ctx.cons(x, ("batch", "seq", "act_embed"))
+    layout = layout_for(cfg, block_pattern(cfg))
+    x, new_caches, _ = apply_stack(cfg, ctx, layout, params["blocks"], x,
+                                   mode="decode", caches=caches, pos=pos)
+    x = _norm(cfg, x, params["ln_f"])
+    logits = L.logits_out(x, params["embed"])[:, 0]
+    return logits, new_caches

@@ -1,0 +1,161 @@
+"""Expert-parallel Mixture-of-Experts with explicit (fully-manual) shard_map.
+
+Layouts are derived from the cell's sharding-rule table (the same source the
+pjit param shardings come from), so expert weights enter the shard_map
+unresharded in whichever layout the cell picked:
+
+  * expert-sharded (dbrx/jamba 16e on a 16-way axis): each model-column owns
+    E/M experts; tokens are batch-sharded on the data axes and replicated
+    across the model axis, so every device already holds the tokens its
+    experts need — dispatch is purely local (capacity-bounded scatter) and a
+    single psum combines expert contributions.  No all-to-all: the
+    TPU-native "experts-where-the-tokens-already-are" layout.
+
+  * ffn-sharded (grok-1 8e on a 16-way axis): experts replicated, each
+    expert's d_ff tensor-parallel; the same psum point combines partial
+    down-projections.
+
+  * 2D serving (jamba/grok/dbrx decode): experts over "model" AND d_ff over
+    the data axes, batch replicated — the only way 398B of experts fits
+    16 GB/chip; psum runs over both axis groups.
+
+  * FSDP training: d_model dim sharded over the data axes on disk/HBM; an
+    explicit tiled all_gather materializes weights inside the body (the
+    manual twin of pjit FSDP).
+
+Returns (out, aux) where aux is the switch-style load-balance loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _wnames(cfg: ArchConfig):
+    return ("wi_gate", "wi_up", "wo") if cfg.mlp_type == "gated_silu" else ("wi", "wo")
+
+
+def moe_specs(cfg: ArchConfig):
+    from repro.models.param import PSpec
+
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    specs = {"router": PSpec((D, E), ("embed", "experts"))}
+    for n in _wnames(cfg):
+        if n == "wo":
+            specs[n] = PSpec((E, F, D), ("experts", "expert_mlp", "embed"),
+                             fan_in=F)
+        else:
+            specs[n] = PSpec((E, D, F), ("experts", "embed", "expert_mlp"),
+                             fan_in=D)
+    return specs
+
+
+def _expert_ffn(x, wp, mlp_type: str):
+    """x: (E_loc, C, D); weights (E_loc, D, F) / (E_loc, F, D)."""
+    if mlp_type == "gated_silu":
+        h = jax.nn.silu(
+            jnp.einsum("ecd,edf->ecf", x, wp["wi_gate"])
+        ) * jnp.einsum("ecd,edf->ecf", x, wp["wi_up"])
+    else:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, wp["wi"]))
+    return jnp.einsum("ecf,efd->ecd", h, wp["wo"])
+
+
+def _axes_of(part) -> tuple[str, ...]:
+    if part is None:
+        return ()
+    if isinstance(part, str):
+        return (part,)
+    return tuple(part)
+
+
+def moe_block(x, p, cfg: ArchConfig, mesh, *, rules,
+              data_axes: tuple[str, ...], batch_sharded: bool):
+    """x: (B, S, D) -> (out, aux_loss).  Fully-manual shard_map."""
+    from repro.distributed.mesh import spec_for
+
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+
+    wi_spec = spec_for((E, D, F), ("experts", "embed", "expert_mlp"), rules, mesh)
+    wo_spec = spec_for((E, F, D), ("experts", "expert_mlp", "embed"), rules, mesh)
+    e_axes = _axes_of(wi_spec[0])
+    d_axes = _axes_of(wi_spec[1])          # FSDP axes (training)
+    f_axes = _axes_of(wi_spec[2])
+    expert_sharded = bool(e_axes)
+    e_div = 1
+    for a in e_axes:
+        e_div *= mesh.shape[a]
+    psum_axes = tuple(dict.fromkeys(e_axes + f_axes))
+
+    dtup = data_axes if len(data_axes) > 1 else data_axes[0]
+    x_spec = P(dtup, None, None) if batch_sharded else P(None, None, None)
+    wspec = {n: (wo_spec if n == "wo" else wi_spec) for n in _wnames(cfg)}
+
+    def body(xb, router, wp):
+        if d_axes:
+            wp = {
+                n: jax.lax.all_gather(
+                    w, d_axes, axis=(2 if n == "wo" else 1), tiled=True)
+                for n, w in wp.items()
+            }
+        B, S, _ = xb.shape
+        T = B * S
+        flat = xb.reshape(T, D)
+
+        probs = jax.nn.softmax(
+            jnp.einsum("td,de->te", flat, router,
+                       preferred_element_type=jnp.float32), axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)        # (T, k)
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+        # switch-style load-balance loss, averaged over data shards
+        me = probs.mean(axis=0)
+        ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(
+            1.0 / (T * cfg.top_k))
+        aux = E * jnp.sum(me * ce)
+        if batch_sharded:
+            aux = jax.lax.pmean(aux, data_axes)
+
+        # rank of each assignment within its expert (one-hot cumsum)
+        eid = gate_idx.reshape(-1)                                   # (T*k,)
+        onehot = jax.nn.one_hot(eid, E, dtype=jnp.int32)
+        rank = jnp.take_along_axis(
+            jnp.cumsum(onehot, axis=0), eid[:, None], axis=1)[:, 0] - 1
+
+        E_loc = E // e_div
+        cap = int(cfg.capacity_factor * T * cfg.top_k / E) + 1
+        if expert_sharded:
+            eix = jax.lax.axis_index(e_axes)
+            local = (eid // E_loc) == eix
+            le = eid % E_loc
+        else:
+            local = jnp.ones_like(eid, dtype=bool)
+            le = eid
+        keep = local & (rank < cap)
+        slot = jnp.clip(rank, 0, cap - 1)
+
+        tok = jnp.repeat(jnp.arange(T), cfg.top_k)
+        src = jnp.where(keep[:, None], flat[tok], 0)
+        buf = jnp.zeros((E_loc, cap, D), xb.dtype).at[le, slot].add(src)
+
+        out_buf = _expert_ffn(buf, wp, cfg.mlp_type)                 # (E_loc,C,D)
+
+        gathered = jnp.where(keep[:, None], out_buf[le, slot], 0)
+        weighted = gathered * gate_vals.reshape(-1)[:, None].astype(gathered.dtype)
+        out = jnp.zeros((T, D), weighted.dtype).at[tok].add(weighted)
+        if psum_axes:
+            out = jax.lax.psum(out, psum_axes)
+        return out.reshape(B, S, D).astype(xb.dtype), aux
+
+    wp_in = {n: p[n] for n in _wnames(cfg)}
+    out, aux = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(x_spec, P(None, None), wspec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"], wp_in)
+    return out, aux

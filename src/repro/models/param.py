@@ -1,0 +1,98 @@
+"""Parameter-spec DSL.
+
+Models declare their parameters as trees of ``PSpec`` (shape + logical axes +
+init).  From one spec tree we derive: abstract ShapeDtypeStructs (dry-run),
+real initialized arrays (smoke tests / training), and NamedShardings (pjit
+in/out shardings) — guaranteeing the three never drift apart.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.mesh import Rules, sharding_for
+
+
+@dataclass(frozen=True)
+class PSpec:
+    shape: tuple[int, ...]
+    logical: tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"       # normal | zeros | ones
+    scale: float = 1.0         # stddev multiplier on fan-in-scaled normal
+    fan_in: int = 0            # 0 -> shape[-2]; 3D+ weights set it exactly
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def tree_map(f, tree):
+    return jax.tree.map(f, tree, is_leaf=is_pspec)
+
+
+def stack(tree, n: int, logical: str = "stack"):
+    """Prefix every leaf with a stacking dim (scan-over-layers storage)."""
+    return tree_map(
+        lambda p: PSpec((n, *p.shape), (logical, *p.logical), p.dtype, p.init,
+                        p.scale, p.fan_in),
+        tree,
+    )
+
+
+def abstract(tree):
+    return tree_map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), tree)
+
+
+def shardings(tree, rules: Rules, mesh):
+    return tree_map(lambda p: sharding_for(p.shape, p.logical, rules, mesh), tree)
+
+
+def initialize(tree, key):
+    """Real arrays; per-leaf keys derived from the tree path (deterministic)."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=is_pspec
+    )[0]
+    treedef = jax.tree_util.tree_structure(tree, is_leaf=is_pspec)
+    arrays = []
+    for path, spec in leaves_with_paths:
+        if spec.init == "zeros":
+            arrays.append(jnp.zeros(spec.shape, spec.dtype))
+        elif spec.init == "ones":
+            arrays.append(jnp.ones(spec.shape, spec.dtype))
+        elif spec.init == "s4d_log":
+            # A_log init: log(1..N) broadcast over the channel dim (S4D-real)
+            n = spec.shape[-1]
+            row = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+            arrays.append(jnp.broadcast_to(row, spec.shape).astype(spec.dtype))
+        else:
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            # zlib.crc32 (not hash()): Python string hashing is randomized
+            # per-process, which would give every host different params.
+            k = jax.random.fold_in(key, zlib.crc32(name.encode()) % (2**31))
+            # 2-D weights: fan_in = input dim (shape[-2]).  3-D+ weights
+            # MUST set fan_in explicitly: shape[-2] of wq (D, H, hd) would
+            # be the head count — measured 8x-hot attention init that grew
+            # the residual stream 16x over 6 layers and froze training
+            # behind the gradient clip.
+            fan_in = spec.fan_in or (
+                spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1])
+            std = spec.scale / np.sqrt(max(fan_in, 1))
+            arrays.append(
+                (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(spec.dtype)
+            )
+    return jax.tree_util.tree_unflatten(treedef, arrays)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_pspec)
+    return sum(int(np.prod(p.shape)) for p in leaves)

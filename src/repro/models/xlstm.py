@@ -1,0 +1,252 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunkwise-parallel) and sLSTM
+(scalar-memory, inherently sequential).
+
+mLSTM recurrence (per head, stabilized):
+    C_t = f_t C_{t-1} + i_t k_t v_t^T        f_t = sigmoid(f~), i_t = exp(i~)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (q_t^T C_t) / max(|q_t . n_t|, 1)
+
+The parallel form is linear attention with a gate-derived decay — we use the
+chunkwise formulation (intra-chunk quadratic + inter-chunk carried state
+(C~, n~, m)) so training memory is O(L/Q * state) instead of O(L * state).
+Stabilizer m folds the running max of log-gates into the carried state:
+C = exp(m) C~.  Decode is the Q=1 recurrence (the carried (C~, n~, m) state
+is exactly what the elastic pool stores for served xLSTM functions).
+
+sLSTM gates depend on h_{t-1} (true recurrence) -> lax.scan over time, in
+checkpointed chunks to bound backward-pass residual memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.param import PSpec
+
+NEG = -1e30
+
+
+# ------------------------------------------------------------- mLSTM -------
+
+def mlstm_specs(cfg: ArchConfig):
+    """mLSTM weights in a v-dim-shardable layout.
+
+    The matrix memory C is (dh_qk x dh_v) per head; sharding the *v* dim
+    ("head_v" -> model) keeps the C update (an outer product k v^T), the
+    readout q^T C and the z-gating all chip-local — the only collective
+    per layer is the psum after the out-projection.  The naive layout
+    (everything "mlp"-sharded, C replicated) made XLA all-reduce the full
+    C state every chunk/step: 7.4 TB/chip per train step, 6.8 GB per
+    decode step (EXPERIMENTS.md §Perf cell B).
+    """
+    D = cfg.d_model
+    din = cfg.d_inner
+    H = cfg.n_heads
+    dh = din // H
+    return {
+        "up_x": PSpec((D, din), ("embed", "mlp")),
+        "up_z": PSpec((D, H, dh), ("embed", None, "head_v"), fan_in=D),
+        "wq": PSpec((din, H, dh), ("mlp", None, None), fan_in=din),
+        "wk": PSpec((din, H, dh), ("mlp", None, None), fan_in=din),
+        "wv": PSpec((din, H, dh), (None, None, "head_v"), fan_in=din),
+        "w_i": PSpec((din, H), ("mlp", None)),
+        "w_f": PSpec((din, H), ("mlp", None)),
+        "b_i": PSpec((H,), (None,), jnp.float32, "zeros"),
+        "b_f": PSpec((H,), (None,), jnp.float32, "ones"),
+        "out": PSpec((H, dh, D), (None, "head_v", "embed"),
+                      fan_in=H * dh),
+    }
+
+
+def mlstm_state_shapes(cfg: ArchConfig, batch: int):
+    H = cfg.n_heads
+    dh = cfg.d_inner // H
+    return {
+        "C": ((batch, H, dh, dh), jnp.float32),
+        "n": ((batch, H, dh), jnp.float32),
+        "m": ((batch, H), jnp.float32),
+    }
+
+
+def _mlstm_chunk(q, k, v, a, b, state):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: (B,H,Q,dh); a = logsigmoid(f~), b = i~ preacts: (B,H,Q).
+    state: dict(C~ (B,H,dh,dh), n~ (B,H,dh), m (B,H)).
+    """
+    Bq, H, Q, dh = q.shape
+    scale = 1.0 / jnp.sqrt(dh)
+    la = jnp.cumsum(a, axis=-1)                         # (B,H,Q) inclusive
+    # log-weight of source j at target i: la_i - la_j + b_j  (j <= i)
+    g = la[..., :, None] - la[..., None, :] + b[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    g = jnp.where(mask, g, NEG)
+    # carry contribution log-weight at target i: la_i + m_prev
+    g_carry = la + state["m"][..., None]                # (B,H,Q)
+    m_i = jnp.maximum(g.max(axis=-1), g_carry)          # (B,H,Q)
+
+    w_intra = jnp.exp(g - m_i[..., None])               # (B,H,Q,Q)
+    w_carry = jnp.exp(g_carry - m_i)                    # (B,H,Q)
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    num = jnp.einsum("bhqk,bhkd->bhqd", s * w_intra, v.astype(jnp.float32))
+    num = num + w_carry[..., None] * jnp.einsum(
+        "bhqd,bhde->bhqe", q.astype(jnp.float32) * scale, state["C"]
+    )
+    qn_intra = (s * w_intra).sum(axis=-1)               # q . n_t, intra part
+    qn = qn_intra + w_carry * jnp.einsum(
+        "bhqd,bhd->bhq", q.astype(jnp.float32) * scale, state["n"]
+    )
+    h = num / jnp.maximum(jnp.abs(qn), jnp.exp(-m_i))[..., None]
+
+    # ---- state update to end of chunk ----
+    LA = la[..., -1]                                    # (B,H) total log-decay
+    g_end = LA[..., None] - la + b                      # (B,H,Q) weight of j at end
+    m_next = jnp.maximum(LA + state["m"], g_end.max(axis=-1))
+    w_end = jnp.exp(g_end - m_next[..., None])
+    C_next = jnp.exp(LA + state["m"] - m_next)[..., None, None] * state["C"] + \
+        jnp.einsum("bhk,bhkd,bhke->bhde", w_end, k.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    n_next = jnp.exp(LA + state["m"] - m_next)[..., None] * state["n"] + \
+        jnp.einsum("bhk,bhkd->bhd", w_end, k.astype(jnp.float32))
+    return h, {"C": C_next, "n": n_next, "m": m_next}
+
+
+def mlstm_forward(x, p, cfg: ArchConfig, *, chunk: int = 256, state=None):
+    """x: (B, L, D) -> (y, state)."""
+    B, L, D = x.shape
+    H = cfg.n_heads
+    din = cfg.d_inner
+    dh = din // H
+
+    if state is None:
+        state = {
+            "C": jnp.zeros((B, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((B, H, dh), jnp.float32),
+            "m": jnp.full((B, H), 0.0, jnp.float32),
+        }
+
+    def proj(x_c):
+        xi = x_c @ p["up_x"]                              # (B,Q,din)
+        z = jnp.einsum("bqd,dhe->bqhe", x_c, p["up_z"])   # v-sharded gate
+        q = jnp.einsum("bqi,ihd->bhqd", xi, p["wq"])
+        k = jnp.einsum("bqi,ihd->bhqd", xi, p["wk"])
+        v = jnp.einsum("bqi,ihd->bhqd", xi, p["wv"])      # (B,H,Q,dh_v)
+        a = jax.nn.log_sigmoid(
+            (jnp.einsum("bqi,ih->bhq", xi, p["w_f"]) + p["b_f"][None, :, None])
+            .astype(jnp.float32))
+        b = (jnp.einsum("bqi,ih->bhq", xi, p["w_i"]) + p["b_i"][None, :, None]) \
+            .astype(jnp.float32)
+        return q, k, v, a, b, z
+
+    def readout(h, z):
+        """h: (B,H,Q,dh_v), z: (B,Q,H,dh_v) -> (B,Q,D), one psum."""
+        y = jnp.einsum("bhqe->bqhe", h.astype(z.dtype)) * jax.nn.silu(z)
+        return jnp.einsum("bqhe,hed->bqd", y, p["out"])
+
+    if L == 1:
+        q, k, v, a, b, z = proj(x)
+        h, state = _mlstm_chunk(q, k, v, a, b, state)
+        return readout(h, z), state
+
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    xs = jnp.moveaxis(x.reshape(B, L // Q, Q, D), 1, 0)
+
+    @jax.checkpoint
+    def body(st, x_c):
+        q, k, v, a, b, z = proj(x_c)
+        h, st = _mlstm_chunk(q, k, v, a, b, st)
+        return st, readout(h, z)
+
+    state, outs = jax.lax.scan(body, state, xs)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, L, D), state
+
+
+# ------------------------------------------------------------- sLSTM -------
+
+def slstm_specs(cfg: ArchConfig):
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    dff = cfg.expand * D
+    return {
+        "w_gates": PSpec((D, 4, H, dh), ("embed", None, None, None),
+                         fan_in=D),
+        "r_gates": PSpec((4, H, dh, dh), (None, None, None, None), scale=0.5),
+        "b_gates": PSpec((4, H, dh), (None, None, None), jnp.float32, "zeros"),
+        "ffn_up": PSpec((D, dff), ("embed", "mlp")),
+        "ffn_gate": PSpec((D, dff), ("embed", "mlp")),
+        "ffn_down": PSpec((dff, D), ("mlp", "embed")),
+    }
+
+
+def slstm_state_shapes(cfg: ArchConfig, batch: int):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return {
+        "c": ((batch, H, dh), jnp.float32),
+        "n": ((batch, H, dh), jnp.float32),
+        "h": ((batch, H, dh), jnp.float32),
+        "m": ((batch, H, dh), jnp.float32),
+    }
+
+
+def _slstm_step(p, st, gx_t):
+    """gx_t: (B, 4, H, dh) input-side gate preacts for one step."""
+    c, n, h, m = st["c"], st["n"], st["h"], st["m"]
+    gr = jnp.einsum("bhd,ghde->bghe", h, p["r_gates"].astype(jnp.float32))
+    g = gx_t.astype(jnp.float32) + gr + p["b_gates"]
+    zt = jnp.tanh(g[:, 0])
+    it, ft, ot = g[:, 1], g[:, 2], jax.nn.sigmoid(g[:, 3])
+    m_new = jnp.maximum(ft + m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(ft + m - m_new)
+    c = fp * c + ip * zt
+    n = fp * n + ip
+    h = ot * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_forward(x, p, cfg: ArchConfig, *, chunk: int = 64, state=None):
+    """x: (B, L, D) -> (y, state).  Strictly sequential recurrence."""
+    B, L, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+
+    if state is None:
+        z = jnp.zeros((B, H, dh), jnp.float32)
+        state = {"c": z, "n": z, "h": z, "m": z}
+
+    gx = jnp.einsum("bld,dghe->blghe", x, p["w_gates"])    # (B,L,4,H,dh)
+
+    def step(st, gx_t):
+        st = _slstm_step(p, st, gx_t)
+        return st, st["h"]
+
+    if L == 1:
+        state, h = step(state, gx[:, 0])
+        hs = h[:, None]
+    else:
+        Q = min(chunk, L)
+        assert L % Q == 0
+        gxs = jnp.moveaxis(
+            gx.reshape(B, L // Q, Q, 4, H, dh), 1, 0
+        )
+
+        @jax.checkpoint
+        def chunk_body(st, gx_c):
+            st, hs = jax.lax.scan(step, st, jnp.moveaxis(gx_c, 1, 0))
+            return st, jnp.moveaxis(hs, 0, 1)
+
+        state, hs = jax.lax.scan(chunk_body, state, gxs)
+        hs = jnp.moveaxis(hs, 0, 1).reshape(B, L, H, dh)
+        hs = hs.reshape(B, L, H * dh)
+
+    if hs.ndim == 4:
+        hs = hs.reshape(B, L, H * dh)
+    y = hs.astype(x.dtype)
+    # post-up-projection FFN (sLSTM block style)
+    h2 = jax.nn.silu(y @ p["ffn_gate"]) * (y @ p["ffn_up"])
+    return h2 @ p["ffn_down"], state

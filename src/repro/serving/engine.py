@@ -1,0 +1,82 @@
+"""Serving engine: prefill -> cache extension -> decode loop.
+
+The prefill->decode cache handoff is the paper's gFunc-to-gFunc data pass:
+prefill emits head-sharded activations; the decode layout wants seq-sharded
+KV pages.  ``extend_caches`` performs the logical resize (pad to the decode
+cache length); on the pod the actual movement goes through the FaaSTube
+transfer engine (core/transfer.py) as a chunked multi-path reshard.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import model as M
+from repro.models.blocks import block_pattern, kind_meta, layout_for
+
+_ATTN_MIXERS = {"attn", "attn_global", "attn_local", "dec_attn"}
+
+
+def _pad_seq(leaf, to_len: int):
+    S = leaf.shape[-2]
+    if S >= to_len:
+        return leaf
+    pad_amt = [(0, 0)] * leaf.ndim
+    pad_amt[-2] = (0, to_len - S)
+    return jnp.pad(leaf, pad_amt)
+
+
+def extend_caches(cfg: ArchConfig, caches, to_len: int):
+    """Pad full-attention k/v caches along kv_seq to ``to_len``.
+
+    Window (circular) caches and recurrent states are fixed-size; cross
+    (ck/cv) caches keep the encoder length.
+    """
+    layout = layout_for(cfg, block_pattern(cfg))
+
+    def pad_run(kind: str, run_cache):
+        meta = kind_meta(cfg, kind)
+        if meta["mixer"] not in _ATTN_MIXERS or meta["window"]:
+            return run_cache
+        out = dict(run_cache)
+        for key in ("k", "v"):
+            out[key] = _pad_seq(run_cache[key], to_len)
+        return out
+
+    return {
+        "units": [pad_run(k, c) for (k, _), c in zip(layout.runs, caches["units"])],
+        "rest": [pad_run(k, c) for (k, _), c in
+                 zip(layout.rest_runs, caches["rest"])],
+    }
+
+
+class Engine:
+    """Single-model engine: greedy decode over a prefix batch."""
+
+    def __init__(self, cfg: ArchConfig, shape: ShapeSpec, mesh, params):
+        self.cfg = cfg
+        self.shape = shape
+        self.mesh = mesh
+        self.params = params
+        self.ctx = M.build_ctx(cfg, shape, mesh)
+        self._prefill = jax.jit(lambda p, b: M.prefill(cfg, self.ctx, p, b))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(cfg, self.ctx, p, c, t, pos))
+
+    def generate(self, batch, max_new_tokens: int, cache_len: int | None = None):
+        """Greedy generation.  Returns (tokens (B, max_new), final_caches)."""
+        prompt_len = batch["tokens"].shape[1]
+        cache_len = cache_len or (prompt_len + max_new_tokens)
+        with jax.set_mesh(self.mesh):
+            logits, caches = self._prefill(self.params, batch)
+            caches = extend_caches(self.cfg, caches, cache_len)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            out = [tok]
+            pos = prompt_len
+            for _ in range(max_new_tokens - 1):
+                logits, caches = self._decode(self.params, caches, tok, pos)
+                tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+                out.append(tok)
+                pos += 1
+        return jnp.concatenate(out, axis=1), caches

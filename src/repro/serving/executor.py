@@ -1,0 +1,244 @@
+"""Workflow executor: the serverless platform driving FaaSTube.
+
+Event-driven over the LinkSim clock.  Each request walks its workflow DAG:
+host inputs are fetched host->gFunc, inter-stage tensors move gFunc->gFunc
+through the tube, outputs that the app returns go gFunc->host.  GPUs are
+temporally shared (one running function at a time, FIFO queue); data-
+passing overlaps other requests' compute — exactly the paper's execution
+model.  Latency split (h2g / g2g / compute) is tracked per request for the
+Fig. 3 / Fig. 12 breakdowns.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+
+from repro.core.api import FaaSTube, TubeConfig, _host_of
+from repro.core.topology import Topology
+from repro.serving.workflow import Workflow, isolated_compute_ms, place
+
+
+@dataclass
+class RequestState:
+    rid: int
+    t_arrive: float
+    done_stages: set = field(default_factory=set)
+    fetched_stages: set = field(default_factory=set)
+    data_ids: dict = field(default_factory=dict)      # stage -> data_id
+    t_done: float = -1.0
+    h2g_ms: float = 0.0
+    g2g_ms: float = 0.0
+    compute_ms: float = 0.0
+    slo_ms: float = 1e9
+
+
+class WorkflowEngine:
+    def __init__(self, topo: Topology, cfg: TubeConfig,
+                 placements: dict[str, dict] | None = None):
+        self.tube = FaaSTube(topo, cfg)
+        self.topo = topo
+        self.cfg = cfg
+        self.placements = placements or {}
+        self.gpu_busy: dict[str, bool] = defaultdict(bool)
+        self.gpu_queue: dict[str, deque] = defaultdict(deque)
+        self.requests: dict[int, RequestState] = {}
+        self._rid = itertools.count()
+        self.completed: list[RequestState] = []
+
+    # ------------------------------------------------------------ public --
+    def submit_workflow(self, w: Workflow, t_arrive: float,
+                        slo_factor: float = 0.0):
+        if w.name not in self.placements:
+            occupied = {}
+            for pl in self.placements.values():
+                occupied.update(pl)
+            self.placements[w.name] = place(w, self.topo, occupied=occupied)
+        rid = next(self._rid)
+        rs = RequestState(rid, t_arrive)
+        if slo_factor:
+            rs.slo_ms = slo_factor * isolated_compute_ms(w)
+        self.requests[rid] = rs
+        self.tube.sim.call_at(t_arrive, lambda sim: self._start(w, rs))
+        return rid
+
+    def run(self):
+        self.tube.sim.run()
+        return self.completed
+
+    # ----------------------------------------------------------- engine ---
+    def _start(self, w: Workflow, rs: RequestState):
+        sim = self.tube.sim
+        # publish host inputs on the host of the consuming stage's node
+        # (cluster topologies have per-node hosts)
+        for stage, mb in w.input_mb.items():
+            did = f"r{rs.rid}:in:{stage}"
+            st = next(t for t in w.stages if t.name == stage)
+            host = _host_of(self._gpu_of(w, st)) if st.kind == "gpu" else "host"
+            self.tube.store(f"r{rs.rid}", did, mb, host, sim.now)
+        for s in w.stages:
+            if not s.deps and s.name not in w.input_mb and s.kind == "cpu":
+                # source cpu stage (decode): runs immediately on host
+                self._run_stage(w, rs, s)
+        for s in w.stages:
+            if s.kind == "gpu" and not s.deps:
+                self._try_stage(w, rs, s)
+
+    def _gpu_of(self, w: Workflow, stage) -> str:
+        return self.placements[w.name][stage.name]
+
+    def _try_stage(self, w: Workflow, rs: RequestState, s):
+        """Enqueue stage s on its GPU's request queue (temporal sharing).
+
+        Inputs are fetched when the invocation reaches the queue front —
+        the paper's execution model (§7.2): intermediates DWELL in the
+        store while upstream producers outpace downstream consumers,
+        which is what makes queue-aware migration matter.
+        """
+        if s.kind == "cpu":
+            def run_cpu():
+                self._consume_fetched(w, rs, s)
+                self._run_stage(w, rs, s)
+            self._fetch_then(w, rs, s, run_cpu)
+            return
+        gpu = self._gpu_of(w, s)
+        self.gpu_queue[gpu].append((w, rs, s))
+        self._drain(gpu)
+
+    def _drain(self, gpu: str):
+        if self.gpu_busy[gpu] or not self.gpu_queue[gpu]:
+            return
+        self.gpu_busy[gpu] = True
+        w, rs, s = self.gpu_queue[gpu].popleft()
+
+        def compute():
+            sim = self.tube.sim
+            # destructive read: inputs are consumed when the invocation
+            # reads them, so spill/prefetch overlaps THIS compute (paper
+            # Fig. 10b) instead of stalling the next consumer
+            self._consume_fetched(w, rs, s)
+
+            def finished(sim2):
+                self.gpu_busy[gpu] = False
+                self._finish_stage(w, rs, s)
+                self._drain(gpu)
+            sim.call_at(sim.now + s.compute_ms, finished)
+        self._fetch_then(w, rs, s, compute)
+
+    def _consume_fetched(self, w: Workflow, rs: RequestState, s):
+        sim = self.tube.sim
+        rs.fetched_stages.add(s.name)
+        for dep, _mb in s.deps:
+            dep_stage = next(t for t in w.stages if t.name == dep)
+            consumers = [t.name for t in w.stages
+                         if any(d == dep for d, _ in t.deps)]
+            if all(c in rs.fetched_stages for c in consumers):
+                did = rs.data_ids.get(dep)
+                if did and dep_stage.kind == "gpu":
+                    self.tube.consume(did, self._gpu_of(w, dep_stage),
+                                      sim.now)
+
+    def _fetch_then(self, w: Workflow, rs: RequestState, s, then):
+        """Fetch all of stage s's inputs, then call `then()`."""
+        sim = self.tube.sim
+        gpu = self._gpu_of(w, s) if s.kind == "gpu" else "host"
+        needed = []
+        if s.name in w.input_mb:
+            needed.append((f"r{rs.rid}:in:{s.name}", "h2g"))
+        for dep, mb in s.deps:
+            needed.append((rs.data_ids[dep], "g2g"))
+        if not needed:
+            then()
+            return
+        pending = {"n": len(needed)}
+        t_fetch_start = sim.now
+
+        for did, kind in needed:
+            def on_ready(sim2, t, kind=kind, t0=t_fetch_start):
+                dt = t - t0
+                if kind == "h2g":
+                    rs.h2g_ms = max(rs.h2g_ms, dt)
+                else:
+                    rs.g2g_ms = max(rs.g2g_ms, dt)
+                pending["n"] -= 1
+                if pending["n"] == 0:
+                    then()
+            self.tube.fetch(f"r{rs.rid}:{s.name}", did, gpu, sim.now,
+                            slo_ms=rs.slo_ms, infer_ms=s.compute_ms,
+                            on_ready=on_ready)
+
+    def _run_stage(self, w: Workflow, rs: RequestState, s):
+        sim = self.tube.sim
+        sim.call_at(sim.now + s.compute_ms,
+                    lambda sim2: self._finish_stage(w, rs, s))
+
+    def _finish_stage(self, w: Workflow, rs: RequestState, s):
+        sim = self.tube.sim
+        rs.compute_ms += s.compute_ms
+        rs.done_stages.add(s.name)
+        # store output for consumers
+        consumers = [t for t in w.stages
+                     if any(d == s.name for d, _ in t.deps)]
+        out_mb = max((mb for t in w.stages for d, mb in t.deps
+                      if d == s.name), default=0.0)
+        ready = sim.now
+        if out_mb and s.kind == "gpu":
+            did = f"r{rs.rid}:{s.name}"
+            rs.data_ids[s.name] = did
+            ready = self.tube.store(f"r{rs.rid}", did, out_mb,
+                                    self._gpu_of(w, s), sim.now,
+                                    consumer_pos=rs.rid)
+        elif out_mb:
+            did = f"r{rs.rid}:{s.name}"
+            rs.data_ids[s.name] = did
+            ready = self.tube.store(f"r{rs.rid}", did, out_mb, "host",
+                                    sim.now)
+
+        # trigger downstream stages whose deps are all done, once the
+        # output store completes (cudaMalloc cost sits on this path when
+        # there is no pool)
+        downstream = [t for t in w.stages
+                      if t.name not in rs.done_stages and t.deps
+                      and all(d in rs.done_stages for d, _ in t.deps)
+                      and s.name in [d for d, _ in t.deps]]
+        for t in downstream:
+            if ready > sim.now:
+                sim.call_at(ready, lambda sim2, t=t: self._try_stage(w, rs, t))
+            else:
+                self._try_stage(w, rs, t)
+
+        # workflow finished?
+        sinks = [t for t in w.stages
+                 if not any(t.name in [d for d, _ in u.deps]
+                            for u in w.stages)]
+        if all(t.name in rs.done_stages for t in sinks):
+            ret_mb = w.output_mb.get(s.name, 0.0)
+            if ret_mb and s.kind == "gpu":
+                def returned(sim2, tr):
+                    self._complete(rs)
+                gpu = self._gpu_of(w, s)
+                self.tube._submit_path(
+                    f"r{rs.rid}:ret", gpu, _host_of(gpu),
+                    ret_mb, sim.now, "g2h", on_done=returned,
+                    multipath=self.cfg.h2g == "parallel")
+                return
+            self._complete(rs)
+
+    def _complete(self, rs: RequestState):
+        if rs.t_done >= 0:
+            return
+        rs.t_done = self.tube.sim.now
+        self.completed.append(rs)
+
+
+def run_closed_loop(topo_fn, cfg: TubeConfig, w: Workflow, *,
+                    n_requests: int = 32, interarrival_ms: float = 0.0,
+                    slo_factor: float = 0.0):
+    """Submit n requests (optionally spaced) and return completed states."""
+    eng = WorkflowEngine(topo_fn(), cfg)
+    t = 0.0
+    for _ in range(n_requests):
+        eng.submit_workflow(w, t, slo_factor=slo_factor)
+        t += interarrival_ms
+    eng.run()
+    return eng

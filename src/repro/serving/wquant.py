@@ -1,0 +1,76 @@
+"""W8A16 weight-only quantization for decode serving.
+
+Decode is weight-streaming-bound: every step reads all (active) weights
+once to produce one token per sequence.  Storing weights as int8 with a
+per-output-channel f32 scale halves the HBM term with no new collectives
+— unlike 2D weight sharding, which forces batch replication and loses to
+its own psums (see distributed/mesh.py NOTE and EXPERIMENTS.md §Perf
+cell C).  Activations stay bf16; the dequant multiply fuses into the
+consuming matmul's operand read.
+
+Only large >=2-D weight leaves quantize (norm scales, biases and the
+embedding table stay bf16: the embedding is read by gather, not
+streamed).  Scales are per-last-dim channel so dequantization broadcasts
+correctly for every weight layout in the model zoo.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.param import PSpec, is_pspec
+
+MIN_QUANT_SIZE = 1 << 16          # small leaves stay bf16
+
+
+def _quantizable(p) -> bool:
+    shape = p.shape
+    n = int(np.prod(shape))
+    return len(shape) >= 2 and n >= MIN_QUANT_SIZE
+
+
+def quant_pspecs(pspec_tree, *, skip_embed: bool = True):
+    """PSpec tree of the quantized representation (for the dry-run)."""
+    def conv(p):
+        if not _quantizable(p) or (skip_embed and p.logical
+                                   and "vocab" in p.logical):
+            return p
+        return {
+            "q": PSpec(p.shape, p.logical, jnp.int8, "zeros"),
+            "s": PSpec((p.shape[-1],), (p.logical[-1],), jnp.float32,
+                       "ones"),
+        }
+    return jax.tree_util.tree_map(conv, pspec_tree, is_leaf=is_pspec)
+
+
+def _is_qleaf(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"q", "s"}
+
+
+def quantize_tree(params, *, skip_embed: bool = True,
+                  min_size: int = MIN_QUANT_SIZE):
+    """bf16/f32 param tree -> mixed tree with {"q": int8, "s": f32}."""
+    def conv(path, x):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if x.ndim < 2 or x.size < min_size or \
+                (skip_embed and "embed" in name.split("/")[-1]):
+            return x
+        xf = x.astype(jnp.float32)
+        s = jnp.max(jnp.abs(xf), axis=tuple(range(x.ndim - 1))) / 127.0
+        s = jnp.maximum(s, 1e-12)
+        q = jnp.round(xf / s).astype(jnp.int8)
+        return {"q": q, "s": s}
+
+    return jax.tree_util.tree_map_with_path(conv, params)
+
+
+def dequant_tree(qparams, dtype=jnp.bfloat16):
+    """Inverse of quantize_tree; applied inside the jitted serve step so
+    the int8 tensors are what lives in (and streams from) HBM."""
+    def conv(x):
+        if _is_qleaf(x):
+            return (x["q"].astype(jnp.float32) * x["s"]).astype(dtype)
+        return x
+    return jax.tree_util.tree_map(conv, qparams, is_leaf=_is_qleaf)

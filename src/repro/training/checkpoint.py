@@ -1,0 +1,130 @@
+"""Sharded checkpointing with resharding-on-restore + async save.
+
+Layout: <dir>/step_<N>/manifest.json + one .npy per leaf (path-keyed).
+``restore`` takes target shardings — restoring onto a different mesh (elastic
+scale-up/down, degraded re-mesh after node failure) is just a device_put with
+the new NamedShardings; nothing about the on-disk format is mesh-specific.
+
+On a real pod each host writes only its addressable shards; on this
+single-process container the full arrays are written (same manifest format,
+noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _leaf_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "__".join(parts) or "root"
+
+
+def save(ckpt_dir: str | Path, step: int, tree, *, extra: dict | None = None):
+    """Synchronous checkpoint save; atomic via tmp-dir rename."""
+    ckpt_dir = Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for path, leaf in leaves:
+        key = _leaf_key(path)
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_name = str(arr.dtype)
+        if dtype_name == "bfloat16":       # numpy can't round-trip bf16
+            np.save(tmp / f"{key}.npy", arr.view(np.uint16))
+        else:
+            np.save(tmp / f"{key}.npy", arr)
+        manifest["leaves"].append(
+            {"key": key, "shape": list(arr.shape), "dtype": dtype_name})
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint writes with training (one in flight)."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+
+    def save(self, ckpt_dir, step, tree, *, extra=None):
+        self.wait()
+        # device_get up front so the training step can mutate freely
+        snapshot = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+        self._thread = threading.Thread(
+            target=save, args=(ckpt_dir, step, snapshot),
+            kwargs={"extra": extra}, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | Path, step: int, target_tree, shardings=None):
+    """Restore into the structure of ``target_tree``; reshard if given.
+
+    ``shardings``: matching tree of NamedShardings (possibly for a different
+    mesh than the checkpoint was written under).
+    """
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    with open(d / "manifest.json") as f:
+        manifest = json.load(f)
+    meta = {m["key"]: m for m in manifest["leaves"]}
+    available = set(meta)
+
+    paths_leaves = jax.tree_util.tree_flatten_with_path(target_tree)[0]
+    treedef = jax.tree_util.tree_structure(target_tree)
+    shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                    else [None] * len(paths_leaves))
+    out = []
+    for (path, tgt), shd in zip(paths_leaves, shard_leaves):
+        key = _leaf_key(path)
+        if key not in available:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = np.load(d / f"{key}.npy")
+        if meta[key]["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        if tuple(arr.shape) != tuple(tgt.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != target {tgt.shape}")
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+def load_extra(ckpt_dir: str | Path, step: int) -> dict:
+    with open(Path(ckpt_dir) / f"step_{step:08d}" / "manifest.json") as f:
+        return json.load(f)["extra"]

@@ -1,0 +1,151 @@
+"""AdamW with sharded state + LR schedules (cosine, WSD) + optional 8-bit
+blockwise-quantized moments.
+
+Optimizer state mirrors the parameter tree: m/v with the same logical axes
+as the parameter (so FSDP/TP sharding rules apply unchanged).  For >100B
+models f32 moments alone exceed 16 GB/chip even at 256-way sharding; the
+int8 mode stores each moment as (int8 codes, per-128-block f32 scales) —
+2.03 bytes/param instead of 8 — dequantized/requantized inside the update
+(bnb-style).  MiniCPM's warmup-stable-decay (WSD) schedule is first-class.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import PSpec, is_pspec, tree_map
+
+_QBLOCK = 128
+_QMIN_SIZE = 65_536     # leaves smaller than this stay f32
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"       # cosine | wsd
+    stable_frac: float = 0.8       # WSD: fraction of steps at peak LR
+    grad_clip: float = 1.0
+    state_dtype: str = "f32"       # f32 | int8
+
+
+def _padded_last(n: int) -> int:
+    return -(-n // _QBLOCK) * _QBLOCK
+
+
+def quantize_blockwise(x):
+    """f32 (..., L) -> {"q": int8 (..., Lp), "scale": f32 (..., Lp/128)}."""
+    last = x.shape[-1]
+    lp = _padded_last(last)
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, lp - last)])
+    xb = xp.reshape(*x.shape[:-1], lp // _QBLOCK, _QBLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0 + 1e-12
+    q = jnp.round(xb / scale[..., None]).astype(jnp.int8)
+    return {"q": q.reshape(*x.shape[:-1], lp), "scale": scale}
+
+
+def dequantize_blockwise(s, last: int):
+    q = s["q"]
+    lp = q.shape[-1]
+    xb = q.reshape(*q.shape[:-1], lp // _QBLOCK, _QBLOCK).astype(jnp.float32)
+    x = (xb * s["scale"][..., None]).reshape(*q.shape[:-1], lp)
+    return x[..., :last]
+
+
+def _quantized_leaf(p: PSpec) -> bool:
+    size = 1
+    for d in p.shape:
+        size *= d
+    return size >= _QMIN_SIZE
+
+
+def _moment_pspec(p: PSpec, state_dtype: str):
+    if state_dtype == "int8" and _quantized_leaf(p):
+        lp = _padded_last(p.shape[-1])
+        return {
+            "q": PSpec((*p.shape[:-1], lp), p.logical, jnp.int8, "zeros"),
+            "scale": PSpec((*p.shape[:-1], lp // _QBLOCK),
+                           p.logical, jnp.float32, "zeros"),
+        }
+    return PSpec(p.shape, p.logical, jnp.float32, "zeros")
+
+
+def lr_at(oc: OptConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    if oc.schedule == "wsd":
+        # warmup -> stable plateau -> 1-sqrt decay (MiniCPM recipe)
+        decay_start = oc.stable_frac * oc.total_steps
+        frac = jnp.clip(
+            (step - decay_start) / jnp.maximum(oc.total_steps - decay_start, 1),
+            0.0, 1.0)
+        decay = 1.0 - jnp.sqrt(frac)
+    else:
+        frac = jnp.clip(step / oc.total_steps, 0.0, 1.0)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return oc.lr * warm * decay
+
+
+def opt_pspecs(param_specs, state_dtype: str = "f32"):
+    """PSpec tree for (m, v): f32 or int8-blockwise per OptConfig."""
+    mk = lambda p: _moment_pspec(p, state_dtype)
+    return {"m": tree_map(mk, param_specs), "v": tree_map(mk, param_specs),
+            "step": PSpec((), (), jnp.int32, "zeros")}
+
+
+def init_opt_state(param_specs):
+    from repro.models import param as PM
+    return PM.initialize(opt_pspecs(param_specs), jax.random.key(0))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw_update(oc: OptConfig, params, grads, opt_state):
+    """Returns (new_params, new_opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+    step = opt_state["step"] + 1
+    lr = lr_at(oc, step)
+    b1c = 1.0 - oc.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - oc.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        quantized = isinstance(m, dict)
+        last = p.shape[-1] if p.ndim else 1
+        if quantized:
+            m = dequantize_blockwise(m, last)
+            v = dequantize_blockwise(v, last)
+        gf = g.astype(jnp.float32)
+        m = oc.b1 * m + (1 - oc.b1) * gf
+        v = oc.b2 * v + (1 - oc.b2) * jnp.square(gf)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if quantized:
+            return new_p, quantize_blockwise(m), quantize_blockwise(v)
+        return new_p, m, v
+
+    is_moment = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"], is_leaf=is_moment)
+    flat_v = jax.tree.leaves(opt_state["v"], is_leaf=is_moment)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}

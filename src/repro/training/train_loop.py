@@ -1,0 +1,94 @@
+"""End-to-end training runner: data pipeline + jit step + async checkpoints
++ fault recovery.  Used by examples/train_small.py and launch/train.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.data.pipeline import Pipeline
+from repro.distributed import fault as F
+from repro.models import model as M
+from repro.models import param as PM
+from repro.training import checkpoint as CKPT
+from repro.training.optimizer import OptConfig, opt_pspecs
+from repro.training.train_step import build_train_step
+
+
+@dataclass
+class TrainState:
+    params: object
+    opt_state: object
+    pipeline: Pipeline
+    step: int = 0
+
+
+def run_training(cfg: ArchConfig, shape: ShapeSpec, mesh, *, steps: int,
+                 oc: OptConfig | None = None, accum: int = 1,
+                 ckpt_dir: str | None = None, resume: bool = False,
+                 policy: F.FaultPolicy | None = None,
+                 failure_injector=None, log_every: int = 10,
+                 log_fn=print, pipeline_cls=Pipeline):
+    oc = oc or OptConfig(schedule=cfg.lr_schedule)
+    policy = policy or F.FaultPolicy(checkpoint_every=0)
+    ctx = M.build_ctx(cfg, shape, mesh)
+    pspecs = M.model_specs(cfg)
+
+    step_fn_raw = build_train_step(cfg, ctx, oc, accum)
+    jit_step = jax.jit(step_fn_raw, donate_argnums=(0, 1))
+
+    def fresh_state():
+        params = M.init_params(cfg, jax.random.key(0))
+        opt_state = PM.initialize(opt_pspecs(pspecs, oc.state_dtype),
+                                  jax.random.key(1))
+        return TrainState(params, opt_state, pipeline_cls(cfg, shape))
+
+    ckpt = CKPT.AsyncCheckpointer()
+
+    def save_fn(state: TrainState, step: int):
+        if ckpt_dir:
+            ckpt.save(ckpt_dir, state.step,
+                      {"params": state.params, "opt": state.opt_state},
+                      extra={"pipeline": state.pipeline.state()})
+
+    def restore_fn():
+        last = CKPT.latest_step(ckpt_dir) if ckpt_dir else None
+        if last is None:
+            return fresh_state(), 0
+        st = fresh_state()
+        tree, manifest = CKPT.restore(
+            ckpt_dir, last, {"params": st.params, "opt": st.opt_state})
+        pipe = pipeline_cls.from_state(cfg, shape,
+                                       manifest["extra"]["pipeline"])
+        return TrainState(tree["params"], tree["opt"], pipe, last), last
+
+    losses = []
+
+    def step_fn(state: TrainState, i: int):
+        batch = state.pipeline.next_batch()
+        with mesh:
+            params, opt_state, metrics = jit_step(
+                state.params, state.opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if log_every and state.step % log_every == 0:
+            log_fn(f"step {state.step}: loss={loss:.4f} "
+                   f"lr={float(metrics['lr']):.2e} "
+                   f"gnorm={float(metrics['grad_norm']):.3f}")
+        # global step lives on the state (resume-correct), not the local
+        # loop index
+        return TrainState(params, opt_state, state.pipeline, state.step + 1)
+
+    if resume and ckpt_dir and CKPT.latest_step(ckpt_dir) is not None:
+        state, start = restore_fn()
+    else:
+        state, start = fresh_state(), 0
+
+    state, stats = F.run_with_recovery(
+        step_fn, state, steps - start, policy,
+        save_fn=save_fn, restore_fn=restore_fn,
+        failure_injector=failure_injector)
+    ckpt.wait()
+    return state, losses, stats

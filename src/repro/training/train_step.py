@@ -1,0 +1,71 @@
+"""Train step: microbatched gradient accumulation + AdamW.
+
+Microbatches are interleaved along the batch dim (reshape (B//a, a, ...) then
+scan over the second axis moved first) so every microbatch stays sharded over
+the data axes — no per-microbatch resharding.  Gradients accumulate in f32
+with the parameter's sharding.  Accum defaults to one batch row per device
+per microbatch, which bounds inter-layer residual memory at
+n_layers * (1, S, D) per device.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed.mesh import data_axes, mesh_axis_size
+from repro.models import model as M
+from repro.training.optimizer import OptConfig, adamw_update
+
+
+def default_accum(shape: ShapeSpec, mesh, cfg: ArchConfig | None = None) -> int:
+    """One batch row per device per microbatch (when divisible)."""
+    dp = mesh_axis_size(mesh, data_axes(mesh))
+    if cfg is not None:
+        from repro.distributed.mesh import use_small_dense_dp
+        if use_small_dense_dp(cfg, shape, mesh):
+            # batch shards over EVERY axis: one row per chip, no accum
+            dp *= mesh.shape["model"]
+    if shape.global_batch % dp:
+        return 1
+    return max(1, shape.global_batch // dp)
+
+
+def _split_microbatches(batch, accum: int):
+    def split(a):
+        b = a.shape[0]
+        assert b % accum == 0, (b, accum)
+        return jnp.moveaxis(a.reshape(b // accum, accum, *a.shape[1:]), 1, 0)
+    return jax.tree.map(split, batch)
+
+
+def build_train_step(cfg: ArchConfig, ctx, oc: OptConfig, accum: int):
+    def loss_of(params, mb):
+        return M.loss_fn(cfg, ctx, params, mb)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, accum)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def mb_body(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            (grads, lsum), _ = jax.lax.scan(
+                mb_body, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = lsum / accum
+            metrics = {}
+
+        new_p, new_o, om = adamw_update(oc, params, grads, opt_state)
+        return new_p, new_o, dict(metrics, loss=loss, **om)
+
+    return train_step
