@@ -1,0 +1,97 @@
+"""Fleet-scale scenario: >=512 concurrent workflows on a 16-node cluster.
+
+FaaSTube's reductions (Fig. 11/17) are measured on one server / a 4-node
+cluster; related GPU-serverless systems (Torpor, arXiv:2306.03622;
+fast-setup GPU serverless, arXiv:2404.14691) evaluate at cluster scale
+with hundreds of concurrent functions.  This scenario drives 64 app
+instances x 8 requests = 512 workflows over 16 dgx-v100 nodes (128 GPUs,
+every 4th app straddling a node boundary) and asserts FaaSTube's
+reduction over the host-staged baseline *holds at fleet scale*.
+
+Only practical on the burst-coalesced engine: the chunk-exact engine
+pushes an order of magnitude more events through the heap for the same
+trace.  Run it with `python -m benchmarks.run fleet` (it is not part of
+the default figure list) — the wall-clock budget asserted here is the CI
+smoke gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from benchmarks.common import emit, lat_ms, p99
+from benchmarks.workloads import arrivals
+from repro.core.api import SYSTEMS
+from repro.core.topology import cluster, dgx_v100
+from repro.serving.executor import WorkflowEngine
+from repro.serving.workflow import WORKFLOWS
+
+N_NODES = 16
+N_APPS = 64          # app instances, round-robin over nodes
+REQS_PER_APP = 8     # 64 x 8 = 512 concurrent workflows
+MIX = ("driving", "video", "traffic", "image")
+WALL_BUDGET_S = 60.0
+
+
+def build_fleet(topo):
+    """Clone workflows into per-app instances with per-node placements."""
+    apps, placements = [], {}
+    cursor = [0] * N_NODES
+    by_node = {n: [g for g in topo.gpus if g.startswith(f"n{n}:")]
+               for n in range(N_NODES)}
+    for k in range(N_APPS):
+        base = WORKFLOWS[MIX[k % len(MIX)]]
+        w = dataclasses.replace(base, name=f"{base.name}@{k}")
+        node = k % N_NODES
+        gpus = by_node[node]
+        gpu_stages = [s for s in w.stages if s.kind == "gpu"]
+        pl = {s.name: gpus[(cursor[node] + i) % len(gpus)]
+              for i, s in enumerate(gpu_stages)}
+        cursor[node] += len(gpu_stages)
+        if k % 4 == 3:          # FaasFlow-style spill: one inter-node edge
+            pl[gpu_stages[-1].name] = by_node[(node + 1) % N_NODES][0]
+        placements[w.name] = pl
+        apps.append(w)
+    return apps, placements
+
+
+def run_fleet(cfg, seed: int = 0) -> WorkflowEngine:
+    topo = cluster(N_NODES, base=dgx_v100)
+    apps, placements = build_fleet(topo)
+    eng = WorkflowEngine(topo, cfg, placements=placements)
+    n_sub = 0
+    for k, w in enumerate(apps):
+        for t in arrivals("bursty", REQS_PER_APP, 40.0, seed + k):
+            eng.submit_workflow(w, t)
+            n_sub += 1
+    eng.run()
+    assert len(eng.completed) == n_sub, \
+        (cfg.name, len(eng.completed), n_sub)
+    return eng
+
+
+def main():
+    from repro.core import linksim as L
+    t0 = time.time()
+    lat, events = {}, {}
+    for sname in ("infless+", "faastube"):
+        e0 = L.TOTAL_EVENTS
+        eng = run_fleet(SYSTEMS[sname])
+        lat[sname] = p99([lat_ms(r) for r in eng.completed])
+        events[sname] = L.TOTAL_EVENTS - e0
+        emit("fleet", f"{sname}.p99", lat[sname], "ms",
+             f"{events[sname]} events")
+    wall = time.time() - t0
+    red = 1 - lat["faastube"] / lat["infless+"]
+    emit("fleet", "n_workflows", N_APPS * REQS_PER_APP, "req",
+         f"{N_NODES}-node cluster, 128 GPUs")
+    emit("fleet", "reduction_vs_infless", 100 * red, "%",
+         "paper band at server scale: 86-90%")
+    emit("fleet", "wall_clock", wall, "s", f"budget: <{WALL_BUDGET_S:.0f}s")
+    assert red >= 0.5, f"fleet-scale reduction collapsed: {red:.2f}"
+    assert wall < WALL_BUDGET_S, f"fleet scenario too slow: {wall:.1f}s"
+    return lat
+
+
+if __name__ == "__main__":
+    main()

@@ -159,6 +159,8 @@ def terms(rec: dict, chips: int = 256) -> dict:
 
 
 def load(mesh: str = "16x16", path: str = RESULTS) -> list[dict]:
+    if not os.path.exists(path):        # dry-run results are opt-in
+        return []
     with open(path) as f:
         recs = json.load(f)
     return [r for r in recs if r.get("mesh") == mesh and "error" not in r

@@ -26,13 +26,27 @@ BENCHES = [
     "roofline",
 ]
 
+# opt-in scenarios, runnable by name (e.g. `python -m benchmarks.run
+# fleet`): heavier than the paper figures, gated in CI instead
+EXTRAS = [
+    "fleet",        # 512 concurrent workflows on a 16-node cluster
+]
+
 
 def main(argv=None) -> int:
     names = (argv or sys.argv[1:]) or BENCHES
     print("bench,name,value,unit,note")
     failed = []
     for name in names:
-        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        except ModuleNotFoundError as e:
+            if e.name != f"benchmarks.{name}":
+                raise              # a real missing dependency, not a typo
+            known = ", ".join(BENCHES + EXTRAS)
+            print(f"unknown benchmark {name!r}; known: {known}",
+                  file=sys.stderr)
+            return 2
         t0 = time.time()
         try:
             mod.main()

@@ -1,0 +1,114 @@
+"""Engine performance meter: events/sec + wall-clock per figure.
+
+``python -m benchmarks.simperf [names...] [--out PATH]`` runs each
+benchmark module (default: the full `benchmarks.run` figure list),
+measuring wall seconds and LinkSim events processed per figure
+(`linksim.TOTAL_EVENTS` deltas), plus two microbenchmarks of the engine
+itself:
+
+  * ``chunk_exact_events_per_sec`` — raw event-loop throughput on a
+    contended link with the per-chunk reference engine;
+  * ``coalesce_speedup`` — wall-clock ratio of the same scenario under
+    the burst-coalesced engine (the tentpole optimization).
+
+Results land in ``BENCH_simperf.json`` (repo root by default) — uploaded
+as a CI artifact so engine regressions show up as a number, not a vibe.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro.core import linksim as L
+from repro.core.topology import dgx_v100
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_simperf.json")
+
+
+def _micro_scenario(coalesce: bool):
+    """16 flows contending for one NVLink + a pipelined 3-hop path."""
+    sim = L.LinkSim(dgx_v100(), policy="drr", coalesce=coalesce)
+    for i in range(16):
+        f = f"f{i}"
+        sim.set_rate_weight(f, 0.5 + (i % 4))
+        sim.submit(f, [(("gpu0", "gpu2"), 24.0)], 64.0, t=i * 1.7)
+        sim.submit(f, [(("gpu0", "gpu1", "gpu5"), 48.0)], 64.0,
+                   t=i * 1.7 + 0.31)
+    t0 = time.perf_counter()
+    sim.run()
+    return time.perf_counter() - t0, sim.n_events
+
+
+def micro() -> dict:
+    wall_exact, ev_exact = _micro_scenario(coalesce=False)
+    wall_coal, ev_coal = _micro_scenario(coalesce=True)
+    return {
+        "chunk_exact_events_per_sec": round(ev_exact / max(wall_exact, 1e-9)),
+        "chunk_exact_events": ev_exact,
+        "coalesced_events": ev_coal,
+        "event_reduction_x": round(ev_exact / max(ev_coal, 1), 1),
+        "coalesce_speedup_x": round(wall_exact / max(wall_coal, 1e-9), 1),
+    }
+
+
+def main(argv=None) -> int:
+    args = list(argv if argv is not None else sys.argv[1:])
+    out_path = DEFAULT_OUT
+    if "--out" in args:
+        i = args.index("--out")
+        out_path = args[i + 1]
+        del args[i:i + 2]
+    if args:
+        names = args
+    else:
+        from benchmarks.run import BENCHES
+        names = list(BENCHES)
+
+    report = {"schema": 1, "micro": micro(), "figures": {}}
+    failed = []
+    t_total = time.perf_counter()
+    for name in names:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        except ModuleNotFoundError as e:
+            if e.name != f"benchmarks.{name}":
+                raise              # a real missing dependency, not a typo
+            print(f"simperf,{name},0,s,unknown benchmark", file=sys.stderr)
+            failed.append(name)
+            continue
+        e0 = L.TOTAL_EVENTS
+        t0 = time.perf_counter()
+        try:
+            mod.main()
+            status = "ok"
+        except AssertionError as e:
+            status = f"FAIL: {e}"
+            failed.append(name)
+        except Exception as e:             # pragma: no cover
+            status = f"ERROR: {type(e).__name__}: {e}"
+            failed.append(name)
+        wall = time.perf_counter() - t0
+        events = L.TOTAL_EVENTS - e0
+        report["figures"][name] = {
+            "wall_s": round(wall, 3),
+            "events": events,
+            "events_per_sec": round(events / max(wall, 1e-9)),
+            "status": status,
+        }
+        print(f"simperf,{name},{wall:.3f},s,"
+              f"{events} events ({status})")
+    report["total_wall_s"] = round(time.perf_counter() - t_total, 3)
+    print(f"simperf,_total,{report['total_wall_s']},s,"
+          f"micro={report['micro']}")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"simperf,_out,{out_path},,")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -217,16 +217,15 @@ class FaaSTube:
             allocs = self.pf.select_paths(alloc_key, src, dst)
             paths = [(a.path, a.bw) for a in allocs]
             if not paths:
-                # graph saturated: share the topology-shortest route; the
-                # DRR link sim arbitrates chunk-level sharing
+                # graph saturated: share the topology-shortest route (a
+                # route-cache hit after the first query); the DRR link sim
+                # arbitrates chunk-level sharing
                 alloc_key = None
-                path, bw = self.pf._next_shortest_path(
-                    src, dst, free_only=False, ignore_load=True)
+                path, bw = self.pf.route(src, dst)
                 paths = [(path, bw)] if path else \
                     [((src, dst), max(self.topo.bw(src, dst), 1e-3))]
         else:
-            path, bw = self.pf._next_shortest_path(src, dst, free_only=False,
-                                                   ignore_load=True)
+            path, bw = self.pf.route(src, dst)
             paths = [(path, bw)] if path else [((src, dst), 1e-3)]
         pin, pinned_ok = (self.pinned.acquire(size_mb)
                           if kind in ("h2g", "g2h") else (0.0, True))
@@ -283,6 +282,14 @@ class FaaSTube:
     def _stitch(self, src, hs, hd, dst):
         p1, _ = self.pf._next_shortest_path(src, hs, free_only=False)
         p2, _ = self.pf._next_shortest_path(hd, dst, free_only=False)
+        if p1 is None:
+            # residual exhausted under load: fall back to the topology
+            # route (chunk-level sharing), never to a fake direct edge —
+            # a gpu has no host link, so the old (src, hs) fallback
+            # simulated a 0-bandwidth hop at fleet-scale concurrency
+            p1, _ = self.pf.route(src, hs)
+        if p2 is None:
+            p2, _ = self.pf.route(hd, dst)
         p1 = p1 or (src, hs)
         p2 = p2 or (hd, dst)
         return tuple(p1) + tuple(p2)

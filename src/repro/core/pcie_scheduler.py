@@ -5,10 +5,17 @@ still meets f's SLO.  The scheduler admits each function with that weight
 on the link simulator's DRR queues (the simulator's chunk interleaving IS
 the paper's proportional batched triggering), and grants the residual idle
 bandwidth to the function with the tightest SLO.
+
+Weight churn interacts with the burst-coalesced engine: every
+`set_rate_weight` whose value actually changes checkpoints the in-flight
+burst's deficit replay at the old weight (see linksim).  `_reweigh` is
+therefore careful to only push weights that changed, and `complete`
+evicts the departed function's weight/deficit state from the simulator
+once its transfers have drained.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.core.linksim import LinkSim
 
@@ -38,6 +45,9 @@ class PcieScheduler:
 
     def complete(self, func: str):
         self.flows.pop(func, None)
+        # bound weights/_deficit growth across long traces: evict the
+        # departed function's state once its transfers have drained
+        self.sim.clear_func(func)
         self._reweigh()
 
     def _reweigh(self):

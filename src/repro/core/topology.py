@@ -30,16 +30,33 @@ class Topology:
     name: str
     edges: dict[tuple[str, str], float] = field(default_factory=dict)
     gpus: list[str] = field(default_factory=list)
+    # version bumps on every mutation; consumers (LinkSim's bandwidth cache,
+    # PathFinder's route cache, the adjacency cache below) key on it
+    version: int = 0
+    _adj: dict = field(default=None, repr=False, compare=False)
+    _adj_version: int = field(default=-1, repr=False, compare=False)
 
     def add(self, a: str, b: str, bw: float):
         self.edges[(a, b)] = bw
         self.edges[(b, a)] = bw
+        self.version += 1
+
+    def remove(self, a: str, b: str):
+        """Remove the directed edge a->b (if present)."""
+        if self.edges.pop((a, b), None) is not None:
+            self.version += 1
 
     def bw(self, a: str, b: str) -> float:
         return self.edges.get((a, b), 0.0)
 
     def neighbors(self, a: str):
-        return [b for (x, b) in self.edges if x == a]
+        if self._adj_version != self.version:
+            adj: dict[str, list[str]] = {}
+            for (x, b) in self.edges:
+                adj.setdefault(x, []).append(b)
+            self._adj = adj
+            self._adj_version = self.version
+        return self._adj.get(a, ())
 
     def gpu_pairs(self):
         out = []

@@ -33,6 +33,30 @@ class RequestState:
     slo_ms: float = 1e9
 
 
+class _WorkflowMeta:
+    """Pre-resolved DAG lookups for one workflow, shared by all requests.
+
+    The executor walks the DAG once per stage per request; resolving
+    consumers/sinks by scanning `w.stages` each time is O(stages^2) per
+    request and dominates at fleet scale (hundreds of concurrent
+    workflows), so the maps are built once per workflow object.
+    """
+    __slots__ = ("stage", "consumers", "out_mb", "downstream", "sinks")
+
+    def __init__(self, w: Workflow):
+        self.stage = {s.name: s for s in w.stages}
+        self.consumers = {s.name: [t.name for t in w.stages
+                                   if any(d == s.name for d, _ in t.deps)]
+                          for s in w.stages}
+        self.out_mb = {s.name: max((mb for t in w.stages for d, mb in t.deps
+                                    if d == s.name), default=0.0)
+                       for s in w.stages}
+        self.downstream = {s.name: [t for t in w.stages if t.deps and
+                                    s.name in [d for d, _ in t.deps]]
+                           for s in w.stages}
+        self.sinks = [t for t in w.stages if not self.consumers[t.name]]
+
+
 class WorkflowEngine:
     def __init__(self, topo: Topology, cfg: TubeConfig,
                  placements: dict[str, dict] | None = None):
@@ -45,6 +69,16 @@ class WorkflowEngine:
         self.requests: dict[int, RequestState] = {}
         self._rid = itertools.count()
         self.completed: list[RequestState] = []
+        self._meta: dict[int, tuple] = {}   # id(w) -> (_WorkflowMeta, w)
+
+    def _wmeta(self, w: Workflow) -> _WorkflowMeta:
+        # keyed by id(w) WITH a strong reference to w in the value: if the
+        # dict didn't keep w alive, a GC'd workflow's recycled id could
+        # alias another workflow's metadata
+        hit = self._meta.get(id(w))
+        if hit is None or hit[1] is not w:
+            hit = self._meta[id(w)] = (_WorkflowMeta(w), w)
+        return hit[0]
 
     # ------------------------------------------------------------ public --
     def submit_workflow(self, w: Workflow, t_arrive: float,
@@ -71,9 +105,10 @@ class WorkflowEngine:
         sim = self.tube.sim
         # publish host inputs on the host of the consuming stage's node
         # (cluster topologies have per-node hosts)
+        meta = self._wmeta(w)
         for stage, mb in w.input_mb.items():
             did = f"r{rs.rid}:in:{stage}"
-            st = next(t for t in w.stages if t.name == stage)
+            st = meta.stage[stage]
             host = _host_of(self._gpu_of(w, st)) if st.kind == "gpu" else "host"
             self.tube.store(f"r{rs.rid}", did, mb, host, sim.now)
         for s in w.stages:
@@ -127,11 +162,11 @@ class WorkflowEngine:
 
     def _consume_fetched(self, w: Workflow, rs: RequestState, s):
         sim = self.tube.sim
+        meta = self._wmeta(w)
         rs.fetched_stages.add(s.name)
         for dep, _mb in s.deps:
-            dep_stage = next(t for t in w.stages if t.name == dep)
-            consumers = [t.name for t in w.stages
-                         if any(d == dep for d, _ in t.deps)]
+            dep_stage = meta.stage[dep]
+            consumers = meta.consumers[dep]
             if all(c in rs.fetched_stages for c in consumers):
                 did = rs.data_ids.get(dep)
                 if did and dep_stage.kind == "gpu":
@@ -174,13 +209,11 @@ class WorkflowEngine:
 
     def _finish_stage(self, w: Workflow, rs: RequestState, s):
         sim = self.tube.sim
+        meta = self._wmeta(w)
         rs.compute_ms += s.compute_ms
         rs.done_stages.add(s.name)
         # store output for consumers
-        consumers = [t for t in w.stages
-                     if any(d == s.name for d, _ in t.deps)]
-        out_mb = max((mb for t in w.stages for d, mb in t.deps
-                      if d == s.name), default=0.0)
+        out_mb = meta.out_mb[s.name]
         ready = sim.now
         if out_mb and s.kind == "gpu":
             did = f"r{rs.rid}:{s.name}"
@@ -197,21 +230,17 @@ class WorkflowEngine:
         # trigger downstream stages whose deps are all done, once the
         # output store completes (cudaMalloc cost sits on this path when
         # there is no pool)
-        downstream = [t for t in w.stages
-                      if t.name not in rs.done_stages and t.deps
-                      and all(d in rs.done_stages for d, _ in t.deps)
-                      and s.name in [d for d, _ in t.deps]]
-        for t in downstream:
+        for t in meta.downstream[s.name]:
+            if t.name in rs.done_stages \
+                    or not all(d in rs.done_stages for d, _ in t.deps):
+                continue
             if ready > sim.now:
                 sim.call_at(ready, lambda sim2, t=t: self._try_stage(w, rs, t))
             else:
                 self._try_stage(w, rs, t)
 
         # workflow finished?
-        sinks = [t for t in w.stages
-                 if not any(t.name in [d for d, _ in u.deps]
-                            for u in w.stages)]
-        if all(t.name in rs.done_stages for t in sinks):
+        if all(t.name in rs.done_stages for t in meta.sinks):
             ret_mb = w.output_mb.get(s.name, 0.0)
             if ret_mb and s.kind == "gpu":
                 def returned(sim2, tr):

@@ -1,0 +1,34 @@
+"""Optional-hypothesis shim.
+
+`hypothesis` is a dev-only dependency (requirements-dev.txt).  Importing
+it unconditionally made the whole suite ERROR at collection on machines
+without it; importing this shim instead keeps every non-property test
+running and marks the @given property sweeps as skipped with an
+actionable reason.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:                       # degraded mode
+    HAVE_HYPOTHESIS = False
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    def given(*_a, **_k):
+        def deco(_f):
+            return pytest.mark.skip(
+                reason="hypothesis not installed "
+                       "(pip install -r requirements-dev.txt)")(_f)
+        return deco
+
+    class _Strategies:
+        """Stands in for `strategies`: any strategy call returns None,
+        which is fine because the @given stub never draws from it."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

@@ -1,0 +1,17 @@
+"""Gate for tests that need the modern jax sharding API.
+
+The model/training stack targets jax >= 0.6 (`jax.set_mesh`,
+`jax.sharding.AxisType`).  On containers with an older jax the simulator
+/ benchmark stack (repro.core, repro.serving.executor) is fully
+functional, so those tests run everywhere; model-stack tests skip with
+an actionable reason instead of erroring.
+"""
+import jax
+import pytest
+
+MODERN_JAX = hasattr(jax, "set_mesh") and hasattr(jax.sharding, "AxisType")
+
+requires_modern_jax = pytest.mark.skipif(
+    not MODERN_JAX,
+    reason=f"installed jax {jax.__version__} lacks set_mesh/AxisType; "
+           "model-stack tests require jax>=0.6")

@@ -1,7 +1,8 @@
 """FaaSTube core invariants: pathfinder, linksim, pool, migration,
 scheduler, index — unit + property tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st
 
 from repro.core.elastic_pool import BLOCK_MB, ElasticPool
 from repro.core.index import DataIndex, DataRecord
