@@ -188,11 +188,14 @@ class FaaSTube:
 
         src_is_dev = src.startswith(("gpu", "chip")) or ":gpu" in src or ":chip" in src
         dst_is_dev = dst.startswith(("gpu", "chip")) or ":gpu" in dst or ":chip" in dst
-        if src == dst:                       # both host-side: shared memory
-            self.sim.call_at(t0 + 0.001, lambda sim: done(sim))
-        elif spilled and dst_is_dev:
+        # spilled data lives in host memory: the reload MUST be checked
+        # before the src == dst shared-memory shortcut, or a same-device
+        # refetch of a spilled item is served as a free shm read
+        if spilled and dst_is_dev:
             self.stats["reloads"] += 1
             self._h2g(func, _host_of(dst), dst, rec.size_mb, t0, done)
+        elif src == dst:                     # both host-side: shared memory
+            self.sim.call_at(t0 + 0.001, lambda sim: done(sim))
         elif src_is_dev and dst_is_dev and _node_of(src) == _node_of(dst):
             self._g2g(func, src, dst, rec.size_mb, t0, done)
         elif src_is_dev and dst_is_dev:

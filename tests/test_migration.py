@@ -1,0 +1,41 @@
+"""Spill/reload data-lifecycle tests (paper §7): the location state
+machine, completion-driven accounting, capacity enforcement, and the
+queue-aware-vs-LRU victim ordering under real baseline accounting."""
+import dataclasses
+
+import pytest
+
+from repro.core.api import FAASTUBE, FaaSTube
+from repro.core.topology import PCIE_PINNED, dgx_v100
+
+
+def _pressure_cfg(**kw):
+    kw.setdefault("store_cap_mb", 64.0)
+    return dataclasses.replace(FAASTUBE, **kw)
+
+
+# ------------------------------------------------------- the anchor bug ---
+
+def test_spilled_same_device_refetch_pays_pcie_reload():
+    """A spilled item refetched on its ORIGINAL device must pay a PCIe
+    h2g reload and count in stats["reloads"] — not be served as a free
+    0.001 ms shared-memory read (regression: the `src == dst` shortcut
+    used to shadow the spilled branch)."""
+    tube = FaaSTube(dgx_v100(), _pressure_cfg())
+    # two 48 MB outputs on a 64 MB store: the second store spills the
+    # first (queue policy: d1's consumer is further back in the queue)
+    tube.store("p1", "d1", 48.0, "gpu0", 0.0, consumer_pos=9)
+    tube.store("p2", "d2", 48.0, "gpu0", 0.0, consumer_pos=1)
+    tube.sim.run(until=4.9)          # let the g2h spill complete
+    assert tube.stats["migrations"] == 1
+
+    done = []
+    tube.fetch("c1", "d1", "gpu0", 5.0, on_ready=lambda sim, t: done.append(t))
+    tube.sim.run()
+    assert tube.stats["reloads"] == 1
+    assert len(done) == 1
+    # 48 MB over PCIe pinned (12 GB/s) is >= 4 ms even with parallel
+    # links; far above the 0.001 ms shared-memory shortcut
+    reload_ms = done[0] - 5.0
+    assert reload_ms >= 0.5 * 48.0 / (4 * PCIE_PINNED), reload_ms
+    assert reload_ms > 1.0
