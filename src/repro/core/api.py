@@ -12,18 +12,38 @@ requester's locations (paper Fig. 8):
   inter-node  — pipelined gpu->host->net->host->gpu (multi-hop chunks flow;
                 the host-oriented baselines do the three stages sequentially)
 
-Store-side: outputs land in the per-device ElasticPool; capacity pressure
-triggers queue-aware migration to host (and prefetch back).  Everything is
-timed on the LinkSim clock; systems differ only in TubeConfig.
+Store-side: every stored intermediate walks an explicit, transfer-
+completion-driven location state machine (migration.py):
+
+  DEVICE -> SPILLING -> HOST -> RELOADING -> DEVICE
+
+Outputs land in the per-device ElasticPool, which *enforces*
+``store_cap_mb``: an allocation that would exceed it forces synchronous
+victim selection (queue-aware or LRU per TubeConfig) and the store's
+ready time is deferred until enough spills complete to make room —
+memory pressure stalls the producer, as on real hardware.  A victim's
+HBM blocks are freed, and its index record's ``location`` flipped to
+"host", only when the g2h copy COMPLETES; until then a racing fetch
+coherently reads the still-valid device copy.  Reloads are sourced from
+the host the item actually spilled to (inter-node when the consumer
+lives on another node), allocate their destination buffer through the
+same capacity machinery, and flip the record back to "device" on
+completion — concurrent fetches park on the in-flight reload instead of
+double-paying.  ``pool="none"`` baselines track resident bytes per
+device so INFless+/DeepPlan+ exercise the same pressure path with LRU
+victims.  Everything is timed on the LinkSim clock; systems differ only
+in TubeConfig.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field, replace
 
-from repro.core.elastic_pool import ElasticPool
+from repro.core.elastic_pool import BLOCK_MB, ElasticPool, blocks_for
 from repro.core.index import DataIndex, DataRecord
 from repro.core.linksim import IPC_MS, LinkSim, alloc_ms
-from repro.core.migration import Migrator, StoredItem
+from repro.core.migration import (
+    DEVICE, HOST, RELOADING, SPILLING, Migrator, StoredItem)
 from repro.core.pathfinder import PathFinder
 from repro.core.pcie_scheduler import PcieScheduler
 from repro.core.pinned_buffer import CircularPinnedBuffer
@@ -82,6 +102,11 @@ def _host_of(device: str) -> str:
     return f"{n}:host" if n else "host"
 
 
+def _is_dev(name: str) -> bool:
+    return name.startswith(("gpu", "chip")) or ":gpu" in name \
+        or ":chip" in name
+
+
 class FaaSTube:
     def __init__(self, topo: Topology, cfg: TubeConfig = FAASTUBE):
         self.topo = topo
@@ -97,6 +122,15 @@ class FaaSTube:
             if cfg.slo_sched else None
         self.stats = {"h2g_ms": 0.0, "g2g_ms": 0.0, "alloc_ms": 0.0,
                       "migrations": 0, "reloads": 0}
+        # pool="none" baselines have no block pool, but resident bytes per
+        # device are still finite: tracked here so INFless+/DeepPlan+ hit
+        # the same store_cap_mb pressure path (with LRU victims)
+        self.resident: dict[str, float] = {}
+        self.resident_peak: dict[str, float] = {}
+        self._home: dict[str, str] = {}          # data_id -> store it lives in
+        # allocations waiting for victim spills to free room, per device:
+        # deque of (size_mb, func, grant) served FIFO as capacity returns
+        self._pending: dict[str, deque] = {}
 
     # --------------------------------------------------------------- api --
     def unique_id(self) -> str:
@@ -104,51 +138,255 @@ class FaaSTube:
 
     def _pool(self, device: str) -> ElasticPool:
         if device not in self.pools:
+            # host memory is not the contended resource: only device
+            # stores enforce the paper's store capacity
+            cap = self.cfg.store_cap_mb if _is_dev(device) else float("inf")
             self.pools[device] = ElasticPool(
-                device, capacity_mb=self.cfg.store_cap_mb,
+                device, capacity_mb=cap,
                 elastic=self.cfg.pool == "elastic")
-            self.items[device] = {}
+            self.items.setdefault(device, {})
         return self.pools[device]
 
-    def store(self, func: str, data_id: str, size_mb: float, device: str,
-              now: float, *, consumer_pos: float = float("inf")) -> float:
-        """Store func's output on device.  Returns ready time (ms)."""
-        cost = 0.0
-        pool = self._pool(device)
+    # ------------------------------------------------- capacity machinery -
+    def _phys_mb(self, device: str) -> float:
+        """MB physically allocated on device right now."""
         if self.cfg.pool == "none":
-            cost += alloc_ms(size_mb)            # cudaMalloc every output
-            buf = -1
+            return self.resident.get(device, 0.0)
+        return self._pool(device).used_mb
+
+    def _mb_needed(self, size_mb: float) -> float:
+        """Footprint of an allocation: block-rounded for pooled configs
+        (must agree with ElasticPool.fits, or a sub-block remainder can
+        make _make_room compute need <= 0 while fits() still fails —
+        stalling a pending store forever)."""
+        if self.cfg.pool == "none":
+            return size_mb
+        return blocks_for(size_mb) * BLOCK_MB
+
+    def _held_mb(self, device: str) -> float:
+        """Physically allocated + committed-pending MB."""
+        return self._phys_mb(device) \
+            + sum(self._mb_needed(size)
+                  for size, _f, _g in self._pending.get(device, ()))
+
+    def _try_alloc(self, device: str, func: str, size_mb: float,
+                   now: float):
+        """(buf_id, cost_ms) if the bytes fit on device now, else None.
+
+        Oversized single items (> the whole store) are force-allocated:
+        no victim selection can ever make room for them.
+        """
+        if self.cfg.pool == "none":
+            cap = self.cfg.store_cap_mb
+            have = self.resident.get(device, 0.0)
+            if have + size_mb > cap and size_mb <= cap:
+                return None
+            self.resident[device] = have + size_mb
+            if self.resident[device] > self.resident_peak.get(device, 0.0):
+                self.resident_peak[device] = self.resident[device]
+            return -1, alloc_ms(size_mb)         # cudaMalloc every output
+        pool = self._pool(device)
+        if not pool.fits(size_mb):
+            if size_mb <= pool.capacity_mb:
+                return None
+            return pool.alloc(func, size_mb, now, force=True)
+        return pool.alloc(func, size_mb, now)
+
+    def _unalloc(self, device: str, buf: int, size_mb: float, t: float):
+        """Undo a _try_alloc whose item died while the grant was pending."""
+        if self.cfg.pool == "none":
+            self.resident[device] = max(
+                0.0, self.resident.get(device, 0.0) - size_mb)
+        elif buf >= 0:
+            self._pool(device).free(buf, t)
+
+    def _release_item(self, item: StoredItem, rec, t: float):
+        """Free whatever device memory the item currently holds."""
+        dev = item.held
+        if not dev:
+            return
+        item.held = ""
+        if self.cfg.pool == "none":
+            self.resident[dev] = max(
+                0.0, self.resident.get(dev, 0.0) - item.size_mb)
+        elif rec is not None and rec.buf_id >= 0:
+            self._pool(dev).free(rec.buf_id, t)
+            rec.buf_id = -1
+
+    def _reserve(self, device: str, func: str, size_mb: float, now: float,
+                 grant):
+        """Obtain size_mb of device memory, spilling victims when the
+        store is full.  ``grant(t, buf_id, cost_ms)`` fires once the
+        bytes are allocated — immediately when there is room, otherwise
+        when enough victim spills complete."""
+        res = self._try_alloc(device, func, size_mb, now)
+        if res is not None:
+            grant(now, res[0], res[1])
+            return
+        self._pending.setdefault(device, deque()).append(
+            (size_mb, func, grant))
+        self._make_room(device, now)
+
+    def _make_room(self, device: str, now: float):
+        """Synchronous victim selection: start enough g2h spills that the
+        pending allocations fit once they complete.  Spills already in
+        flight count toward the freed total (no over-spilling)."""
+        in_flight = sum(self._mb_needed(i.size_mb)
+                        for i in self.items.get(device, {}).values()
+                        if i.state == SPILLING)
+        need = self._held_mb(device) - in_flight - self.cfg.store_cap_mb
+        if need <= 0:
+            return
+        candidates = [i for i in self.items.get(device, {}).values()
+                      if i.state == DEVICE and i.held]
+        for v in self.migrator.pick_victims(candidates, need):
+            self._spill(v, device, now)
+
+    def _drain_pending(self, device: str, t: float):
+        """Serve deferred allocations FIFO as capacity returns."""
+        dq = self._pending.get(device)
+        if not dq:
+            return
+        while dq:
+            size_mb, func, grant = dq[0]
+            res = self._try_alloc(device, func, size_mb, t)
+            if res is None:
+                break
+            dq.popleft()
+            grant(t, res[0], res[1])
+        if dq:
+            self._make_room(device, t)   # head still blocked: spill more
         else:
-            buf, c = pool.alloc(func, size_mb, now)
-            cost += c
-        self.stats["alloc_ms"] += cost
+            self._pending.pop(device, None)
 
-        # capacity pressure -> migrate victims to host (async with exec);
-        # host-side stores never spill (they already live in host memory)
-        is_dev = device.startswith(("gpu", "chip")) or ":gpu" in device \
-            or ":chip" in device
-        if is_dev and pool.used_mb > self.cfg.store_cap_mb:
-            need = pool.used_mb - self.cfg.store_cap_mb
-            victims = self.migrator.pick_victims(
-                list(self.items[device].values()), need)
-            for v in victims:
-                v.on_host = True
-                self.stats["migrations"] += 1
-                self._submit_path(func, device, _host_of(device), v.size_mb,
-                                  now, kind="g2h")
-                # the spilled buffer's HBM blocks are released (the data
-                # now lives in host memory) so prefetch-back has room
-                vrec = self.index.global_table.get(v.data_id)
-                if vrec is not None and vrec.buf_id >= 0 \
-                        and self.cfg.pool != "none":
-                    pool.free(vrec.buf_id, now)
-                    vrec.buf_id = -1
+    # ---------------------------------------------------- spill / reload --
+    def _spill(self, v: StoredItem, device: str, now: float):
+        """DEVICE -> SPILLING.  The HBM copy stays valid (and allocated)
+        until the g2h transfer completes."""
+        v.set_state(SPILLING)
+        v.host = _host_of(device)
+        self.stats["migrations"] += 1
 
-        self.items[device][data_id] = StoredItem(
-            data_id, size_mb, now, now, consumer_pos)
-        self.index.publish(DataRecord(
-            data_id, _node_of(device), device, size_mb, "device", buf))
-        return now + cost
+        def landed(sim, tr=None):
+            self._spill_complete(v, device, sim.now)
+        self._submit_path(v.func or "migrate", device, v.host, v.size_mb,
+                          now, "g2h", on_done=landed)
+
+    def _spill_complete(self, v: StoredItem, device: str, t: float):
+        """SPILLING -> HOST: free the HBM blocks and flip the index
+        record to the host the data actually landed on."""
+        if self.items.get(device, {}).get(v.data_id) is not v \
+                or v.state != SPILLING:
+            return          # consumed while the copy was in flight
+        rec = self.index.global_table.get(v.data_id)
+        self._release_item(v, rec, t)
+        v.set_state(HOST)
+        if rec is not None:
+            self.index.relocate(rec, v.host, "host")
+        self._drain_pending(device, t)
+
+    def _demand_reload(self, func: str, item: StoredItem, rec, dst: str,
+                       t0: float, done):
+        """HOST -> RELOADING -> DEVICE: reload from the host the item
+        spilled to (inter-node when the consumer sits on another node),
+        paying destination allocation + PCIe h2g.  The index flips back
+        to "device" only when the copy lands."""
+        self.stats["reloads"] += 1
+        src_host = rec.device if rec.device and not _is_dev(rec.device) \
+            else (item.host or _host_of(dst))
+        home = self._home.get(item.data_id, dst)
+        item.set_state(RELOADING)
+
+        def grant(t, buf, cost):
+            if self.items.get(home, {}).get(item.data_id) is not item:
+                self._unalloc(dst, buf, item.size_mb, t)
+                return
+            self.stats["alloc_ms"] += cost
+            item.held = dst
+            if buf >= 0:
+                rec.buf_id = buf
+
+            def landed(sim, tr=None):
+                self._reload_complete(item, rec, dst, sim)
+                done(sim)
+            self._h2g(func, src_host, dst, rec.size_mb, t + cost, landed)
+
+        self._reserve(dst, item.func or func, rec.size_mb, t0, grant)
+
+    def _reload_complete(self, item: StoredItem, rec, dst: str, sim):
+        """RELOADING -> DEVICE: rehome the item onto the destination
+        store, flip the index, and re-dispatch any parked fetches."""
+        home = self._home.get(item.data_id)
+        if home is None \
+                or self.items.get(home, {}).get(item.data_id) is not item:
+            # consumed while the reload was in flight: drop the copy
+            self._release_item(item, rec, sim.now)
+            return
+        if home != dst:
+            del self.items[home][item.data_id]
+            self._pool(dst)                      # ensure the store exists
+            self.items[dst][item.data_id] = item
+            self._home[item.data_id] = dst
+        item.set_state(DEVICE)
+        item.host = ""
+        self.index.relocate(rec, dst, "device")
+        waiters, item.waiters = item.waiters, []
+        for w in waiters:
+            w(sim, sim.now)
+        self._drain_pending(dst, sim.now)
+
+    # --------------------------------------------------------------- store -
+    def store(self, func: str, data_id: str, size_mb: float, device: str,
+              now: float, *, consumer_pos: float = float("inf"),
+              on_ready=None) -> float:
+        """Store func's output on device.
+
+        Returns the ready time (ms) for the synchronous path.  When the
+        store must wait for capacity (victim spills in flight) the
+        return value is a lower bound; pass ``on_ready(sim, t)`` to
+        observe the true completion-driven ready time.
+        """
+        self._pool(device)               # ensure pool + item store exist
+        item = StoredItem(data_id, size_mb, now, now, consumer_pos,
+                          func=func)
+        self.items[device][data_id] = item
+        self._home[data_id] = device
+        rec = DataRecord(data_id, _node_of(device), device, size_mb,
+                         "device", -1)
+        self.index.publish(rec)
+
+        if not _is_dev(device):
+            # host-side store: host memory is unbounded, never spills
+            if self.cfg.pool == "none":
+                buf, cost = -1, alloc_ms(size_mb)
+            else:
+                buf, cost = self.pools[device].alloc(func, size_mb, now)
+            self.stats["alloc_ms"] += cost
+            item.held = device
+            rec.buf_id = buf
+            ready = now + cost
+            if on_ready is not None:
+                self.sim.call_at(ready, lambda sim: on_ready(sim, ready))
+            return ready
+
+        def grant(t, buf, cost):
+            if self.items.get(device, {}).get(data_id) is not item:
+                self._unalloc(device, buf, item.size_mb, t)
+                return                   # consumed while waiting for room
+            self.stats["alloc_ms"] += cost
+            item.held = device
+            if buf >= 0:
+                rec.buf_id = buf
+            ready = t + cost
+            if on_ready is not None:
+                if ready > self.sim.now:
+                    self.sim.call_at(ready,
+                                     lambda sim: on_ready(sim, ready))
+                else:
+                    on_ready(self.sim, ready)
+
+        self._reserve(device, func, size_mb, now, grant)
+        return now   # lower bound; true ready time arrives via on_ready
 
     def fetch(self, func: str, data_id: str, dst: str, now: float, *,
               slo_ms: float = 1e9, infer_ms: float = 0.0, on_ready=None):
@@ -157,19 +395,32 @@ class FaaSTube:
         if not self.cfg.unified_index:
             lk += 0.1                     # per-op RPC instead of local pipe
         t0 = now + lk
-        dst_is_device = dst.startswith(("gpu", "chip")) or ":gpu" in dst \
-            or ":chip" in dst
-        if self.cfg.pool == "none" and dst_is_device and rec.device != dst:
+        home = self._home.get(data_id)
+        item = self.items.get(home, {}).get(data_id) \
+            if home is not None else None
+        if item is not None and item.state == RELOADING:
+            # an h2g reload is already in flight: park this fetch; it is
+            # re-dispatched (paying its own move from the landed copy)
+            # when the reload completes
+            item.waiters.append(lambda sim, t: self.fetch(
+                func, data_id, dst, t, slo_ms=slo_ms, infer_ms=infer_ms,
+                on_ready=on_ready))
+            return
+        dst_is_dev = _is_dev(dst)
+        # HOST only: a SPILLING item's device copy is still valid — a
+        # racing fetch coherently reads it through the normal paths below
+        spilled = item is not None and item.state == HOST
+        src = rec.device
+        if item is not None:
+            item.last_access = t0
+        if self.cfg.pool == "none" and dst_is_dev and src != dst \
+                and not spilled:
             # receiver allocates the destination buffer with cudaMalloc;
-            # pooled configs serve it from warm blocks for free
+            # pooled configs serve it from warm blocks for free (reloads
+            # allocate through the store's capacity machinery instead)
             c = alloc_ms(rec.size_mb)
             self.stats["alloc_ms"] += c
             t0 += c
-        src = rec.device
-        item = self.items.get(src, {}).get(data_id)
-        spilled = bool(item and item.on_host)
-        if item:
-            item.last_access = t0
 
         if self.sched:
             self.sched.admit(func, rec.size_mb, slo_ms, infer_ms)
@@ -180,22 +431,28 @@ class FaaSTube:
             if on_ready:
                 on_ready(sim, sim.now)
 
-        if src == dst and not spilled:
-            # intra-GPU: IPC map + HBM copy
-            t_ready = t0 + IPC_MS + rec.size_mb / HBM_COPY_BW
-            self.sim.call_at(t_ready, lambda sim: done(sim))
-            return
-
-        src_is_dev = src.startswith(("gpu", "chip")) or ":gpu" in src or ":chip" in src
-        dst_is_dev = dst.startswith(("gpu", "chip")) or ":gpu" in dst or ":chip" in dst
+        src_is_dev = _is_dev(src)
         # spilled data lives in host memory: the reload MUST be checked
         # before the src == dst shared-memory shortcut, or a same-device
         # refetch of a spilled item is served as a free shm read
         if spilled and dst_is_dev:
-            self.stats["reloads"] += 1
-            self._h2g(func, _host_of(dst), dst, rec.size_mb, t0, done)
-        elif src == dst:                     # both host-side: shared memory
-            self.sim.call_at(t0 + 0.001, lambda sim: done(sim))
+            self._demand_reload(func, item, rec, dst, t0, done)
+        elif spilled:
+            # host-side consumer of host-resident data: a shm read on
+            # the spill host's node (unqualified "host" consumers are
+            # node-less cpu stages), but a NET transfer when the
+            # consumer names another node's host
+            if _node_of(src) == _node_of(dst) or not _node_of(dst):
+                self.sim.call_at(t0 + 0.001, lambda sim: done(sim))
+            else:
+                self._submit_path(func, src, dst, rec.size_mb, t0, "h2h",
+                                  on_done=lambda s, tr: done(s))
+        elif src == dst:
+            if dst_is_dev:               # intra-GPU: IPC map + HBM copy
+                t_ready = t0 + IPC_MS + rec.size_mb / HBM_COPY_BW
+                self.sim.call_at(t_ready, lambda sim: done(sim))
+            else:                        # both host-side: shared memory
+                self.sim.call_at(t0 + 0.001, lambda sim: done(sim))
         elif src_is_dev and dst_is_dev and _node_of(src) == _node_of(dst):
             self._g2g(func, src, dst, rec.size_mb, t0, done)
         elif src_is_dev and dst_is_dev:
@@ -299,23 +556,47 @@ class FaaSTube:
 
     # ------------------------------------------------------------ consume -
     def consume(self, data_id: str, device: str, now: float):
-        """Mark data consumed: clear it and prefetch spilled items back."""
-        items = self.items.get(device, {})
-        it = items.pop(data_id, None)
+        """Mark data consumed: release its memory, serve allocations that
+        were waiting for room, and prefetch spilled items back."""
+        home = self._home.pop(data_id, device)
+        it = self.items.get(home, {}).pop(data_id, None)
         rec = self.index.global_table.get(data_id)
-        if rec is not None and rec.buf_id >= 0 and self.cfg.pool != "none":
-            self._pool(device).free(rec.buf_id, now)
         self.index.drop(data_id)
-        if self.cfg.migration == "queue" and it is not None:
-            pool = self._pool(device)
-            space = self.cfg.store_cap_mb - pool.used_mb
-            for p in self.migrator.pick_prefetch(list(items.values()), space):
-                buf, _ = pool.alloc("prefetch", p.size_mb, now)
-                prec = self.index.global_table.get(p.data_id)
-                if prec is not None:
-                    prec.buf_id = buf
+        if it is None:
+            return
+        freed_dev = it.held or home      # RELOADING items hold on their dst
+        self._release_item(it, rec, now)
+        if not _is_dev(freed_dev):
+            return
+        self._drain_pending(freed_dev, now)
+        if self.cfg.migration != "queue":
+            return
+        space = self.cfg.store_cap_mb - self._held_mb(freed_dev)
+        spilled = list(self.items.get(freed_dev, {}).values())
+        for p in self.migrator.pick_prefetch(spilled, space):
+            self._prefetch(p, freed_dev, now)
 
-                def back(sim, tr, p=p):
-                    p.on_host = False       # resident once the copy lands
-                self._submit_path("prefetch", _host_of(device), device,
-                                  p.size_mb, now, "h2g", on_done=back)
+    def _prefetch(self, p: StoredItem, device: str, now: float):
+        """Smart-migration prefetch: reload a HOST-state item into freed
+        space before its consumer runs.  The allocation is attributed to
+        the item's producing function (not a synthetic one) and its cost
+        is charged like any other allocation."""
+        prec = self.index.global_table.get(p.data_id)
+        if prec is None:
+            return
+        src_host = p.host or _host_of(device)
+        p.set_state(RELOADING)
+        res = self._try_alloc(device, p.func or "prefetch", p.size_mb, now)
+        if res is None:
+            p.set_state(HOST)            # space vanished: stay spilled
+            return
+        buf, cost = res
+        self.stats["alloc_ms"] += cost
+        p.held = device
+        if buf >= 0:
+            prec.buf_id = buf
+
+        def back(sim, tr=None, p=p):
+            self._reload_complete(p, prec, device, sim)
+        self._submit_path(p.func or "prefetch", src_host, device,
+                          p.size_mb, now + cost, "h2g", on_done=back)

@@ -22,6 +22,20 @@ from repro.core.linksim import alloc_ms
 BLOCK_MB = 2.0
 
 
+class PoolCapacityError(RuntimeError):
+    """An allocation would push used blocks past ``capacity_mb``.
+
+    Raised instead of silently over-committing: the caller (the FaaSTube
+    store facade) must spill victims and retry once their g2h copies
+    complete.  ``alloc(..., force=True)`` bypasses the check for single
+    items larger than the whole store, where no victim can ever help.
+    """
+
+
+def blocks_for(size_mb: float) -> int:
+    return max(1, int(-(-size_mb // BLOCK_MB)))
+
+
 def _p99(values) -> float:
     if not values:
         return 0.0
@@ -74,6 +88,7 @@ class ElasticPool:
         self.stats: dict[str, _FuncStats] = defaultdict(_FuncStats)
         self._next = 0
         self.timeline: list[tuple[float, float]] = []   # (t, pool MB)
+        self.peak_used_mb = 0.0         # high-water mark of live blocks
 
     # ------------------------------------------------------------ sizes ---
     @property
@@ -88,8 +103,25 @@ class ElasticPool:
         self.timeline.append((t, self.pool_mb))
 
     # ------------------------------------------------------------- alloc --
-    def alloc(self, func: str, size_mb: float, now: float) -> tuple[int, float]:
-        """Returns (buf_id, cost_ms)."""
+    def fits(self, size_mb: float) -> bool:
+        """Would an allocation of size_mb stay within capacity_mb?"""
+        return (self.used_blocks + blocks_for(size_mb)) * BLOCK_MB \
+            <= self.capacity_mb
+
+    def alloc(self, func: str, size_mb: float, now: float, *,
+              force: bool = False) -> tuple[int, float]:
+        """Returns (buf_id, cost_ms).
+
+        Raises PoolCapacityError when the blocks would exceed
+        capacity_mb — callers must spill victims first and retry on
+        completion.  force=True bypasses the check (single items larger
+        than the whole store).
+        """
+        if not force and not self.fits(size_mb):
+            raise PoolCapacityError(
+                f"{self.device}: alloc {size_mb:.0f} MB would exceed "
+                f"capacity {self.capacity_mb:.0f} MB "
+                f"(used {self.used_mb:.0f} MB)")
         st = self.stats[func]
         st.arrivals.append(now)
         st.sizes.append(size_mb)
@@ -97,7 +129,7 @@ class ElasticPool:
         st.live_hist.append(st.live)
         st.last_exec = now
 
-        blocks = max(1, int(-(-size_mb // BLOCK_MB)))
+        blocks = blocks_for(size_mb)
         cost = 0.0
         if self.cached_blocks >= blocks:
             self.cached_blocks -= blocks
@@ -106,13 +138,20 @@ class ElasticPool:
             self.cached_blocks = 0
             cost = alloc_ms(grow * BLOCK_MB)
         self.used_blocks += blocks
+        if self.used_mb > self.peak_used_mb:
+            self.peak_used_mb = self.used_mb
         self._next += 1
         self.bufs[self._next] = Buf(self._next, func, size_mb, blocks, now, now)
         self._record(now)
         return self._next, cost
 
     def free(self, buf_id: int, now: float):
-        buf = self.bufs.pop(buf_id)
+        """Release a buffer back to the cache.  Idempotent: freeing an
+        unknown / already-freed buf_id is a no-op (the spill-completion
+        and consume paths may race on the same buffer)."""
+        buf = self.bufs.pop(buf_id, None)
+        if buf is None:
+            return
         self.used_blocks -= buf.blocks
         self.cached_blocks += buf.blocks
         st = self.stats[buf.func]

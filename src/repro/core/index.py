@@ -2,6 +2,14 @@
 table.  Functions query their local table first (shared-memory pipe,
 ~2 us); a miss escalates to the global node (RPC, ~50 us).  Local tables
 sync to the global table on every publish (write-through, async).
+
+A record's ``location`` ("device" | "host") follows the store's location
+state machine and flips via `relocate` only when the migration transfer
+*completes* — while a spill's g2h copy is in flight the record still
+points at the device (the HBM copy is the valid one), and a reload flips
+it back to the destination device only when the h2g copy lands.  Local
+tables share the record object with the global table, so a relocate is
+visible everywhere without an extra RPC (write-through semantics).
 """
 from __future__ import annotations
 
@@ -50,6 +58,15 @@ class DataIndex:
         # cache into the local table for next time
         self.local.setdefault(node, {})[data_id] = rec
         return rec, GLOBAL_LOOKUP_MS
+
+    def relocate(self, rec: DataRecord, device: str, location: str):
+        """Flip a record's physical location on transfer completion
+        (spill landed -> its host; reload landed -> the destination
+        device) and publish it into the new node's local table."""
+        rec.device = device
+        rec.location = location
+        rec.node = device.split(":")[0] if ":" in device else ""
+        self.local.setdefault(rec.node, {})[rec.data_id] = rec
 
     def drop(self, data_id: str):
         self.global_table.pop(data_id, None)

@@ -1,4 +1,5 @@
-"""Queue-aware data migration (paper §7.2) vs the LRU baseline.
+"""Queue-aware data migration (paper §7.2) vs the LRU baseline, and the
+data-location state machine every stored intermediate walks.
 
 When the device store hits its capacity limit, victims must spill to host
 memory.  LRU evicts the oldest — but in a serverless workflow the oldest
@@ -6,10 +7,30 @@ intermediate is usually the *next* one consumed (its downstream function was
 enqueued first).  Queue-aware migration instead evicts the item whose
 consumer sits furthest back in the request queue, clears consumed items
 immediately, and prefetches spilled items back as memory frees up.
+
+Location state machine (transfer-completion driven)
+---------------------------------------------------
+
+    DEVICE --spill picked--> SPILLING --g2h done--> HOST
+    HOST --reload/prefetch--> RELOADING --h2g done--> DEVICE
+
+State flips happen on *transfer completion*, never at submit time:
+
+  * SPILLING keeps the HBM copy valid (a racing fetch may still read the
+    device-resident bytes); the blocks are freed — and the index record's
+    ``location`` flips to "host" — only when the g2h copy lands.
+  * RELOADING holds the destination buffer from reload start (the DMA
+    needs somewhere to land); concurrent fetches park on ``waiters`` and
+    are re-dispatched when the copy completes.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+
+DEVICE = "device"        # resident in a device store
+SPILLING = "spilling"    # g2h in flight; the HBM copy is valid until done
+HOST = "host"            # spill landed: lives in host memory only
+RELOADING = "reloading"  # h2g in flight back to a device
 
 
 @dataclass
@@ -19,7 +40,21 @@ class StoredItem:
     t_stored: float
     last_access: float
     consumer_pos: float = float("inf")   # position of downstream fn in queue
-    on_host: bool = False
+    on_host: bool = False    # back-compat mirror of ``state == HOST``
+    func: str = ""           # producing function (alloc/prefetch attribution)
+    state: str = DEVICE
+    host: str = ""           # the host this item spilled to
+    held: str = ""           # device currently charged for the bytes
+    waiters: list = field(default_factory=list)  # fetches parked on a reload
+
+    def __post_init__(self):
+        if self.on_host and self.state == DEVICE:
+            self.state = HOST
+        self.on_host = self.state == HOST
+
+    def set_state(self, state: str):
+        self.state = state
+        self.on_host = state == HOST
 
 
 class Migrator:
@@ -31,8 +66,12 @@ class Migrator:
 
     def pick_victims(self, items: list[StoredItem], need_mb: float
                      ) -> list[StoredItem]:
-        """Choose device-resident items to spill until need_mb is covered."""
-        resident = [i for i in items if not i.on_host]
+        """Choose device-resident items to spill until need_mb is covered.
+
+        Only DEVICE-state items qualify: SPILLING ones are already on
+        their way out, RELOADING ones are inbound, HOST ones are gone.
+        """
+        resident = [i for i in items if i.state == DEVICE]
         if self.policy == "lru":
             order = sorted(resident, key=lambda i: i.last_access)
         else:
@@ -49,8 +88,8 @@ class Migrator:
 
     def pick_prefetch(self, items: list[StoredItem], space_mb: float
                       ) -> list[StoredItem]:
-        """Reload spilled items whose consumers are soonest."""
-        spilled = sorted([i for i in items if i.on_host],
+        """Reload spilled (HOST-state) items whose consumers are soonest."""
+        spilled = sorted([i for i in items if i.state == HOST],
                          key=lambda i: i.consumer_pos)
         out, acc = [], 0.0
         for it in spilled:

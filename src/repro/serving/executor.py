@@ -24,6 +24,8 @@ class RequestState:
     rid: int
     t_arrive: float
     done_stages: set = field(default_factory=set)
+    started_stages: set = field(default_factory=set)
+    stored_stages: set = field(default_factory=set)
     fetched_stages: set = field(default_factory=set)
     data_ids: dict = field(default_factory=dict)      # stage -> data_id
     t_done: float = -1.0
@@ -129,7 +131,14 @@ class WorkflowEngine:
         the paper's execution model (§7.2): intermediates DWELL in the
         store while upstream producers outpace downstream consumers,
         which is what makes queue-aware migration matter.
+
+        Idempotent per stage: a fan-in stage's producers each report
+        store completion independently, and more than one of those
+        callbacks can observe all deps done.
         """
+        if s.name in rs.started_stages:
+            return
+        rs.started_stages.add(s.name)
         if s.kind == "cpu":
             def run_cpu():
                 self._consume_fetched(w, rs, s)
@@ -212,32 +221,35 @@ class WorkflowEngine:
         meta = self._wmeta(w)
         rs.compute_ms += s.compute_ms
         rs.done_stages.add(s.name)
-        # store output for consumers
         out_mb = meta.out_mb[s.name]
-        ready = sim.now
+
+        # trigger downstream stages once every dep's output store has
+        # COMPLETED (stored_stages, not done_stages): the alloc cost
+        # sits on this path when there is no pool, and under memory
+        # pressure a store's ready time is completion-driven (it waits
+        # for victim spills) — a consumer must not start against a
+        # producer output whose capacity-deferred allocation never landed
+        def stored(sim2, t):
+            rs.stored_stages.add(s.name)
+            for tg in meta.downstream[s.name]:
+                if tg.name in rs.done_stages \
+                        or not all(d in rs.stored_stages for d, _ in tg.deps):
+                    continue
+                self._try_stage(w, rs, tg)
+
         if out_mb and s.kind == "gpu":
             did = f"r{rs.rid}:{s.name}"
             rs.data_ids[s.name] = did
-            ready = self.tube.store(f"r{rs.rid}", did, out_mb,
-                                    self._gpu_of(w, s), sim.now,
-                                    consumer_pos=rs.rid)
+            self.tube.store(f"r{rs.rid}", did, out_mb,
+                            self._gpu_of(w, s), sim.now,
+                            consumer_pos=rs.rid, on_ready=stored)
         elif out_mb:
             did = f"r{rs.rid}:{s.name}"
             rs.data_ids[s.name] = did
-            ready = self.tube.store(f"r{rs.rid}", did, out_mb, "host",
-                                    sim.now)
-
-        # trigger downstream stages whose deps are all done, once the
-        # output store completes (cudaMalloc cost sits on this path when
-        # there is no pool)
-        for t in meta.downstream[s.name]:
-            if t.name in rs.done_stages \
-                    or not all(d in rs.done_stages for d, _ in t.deps):
-                continue
-            if ready > sim.now:
-                sim.call_at(ready, lambda sim2, t=t: self._try_stage(w, rs, t))
-            else:
-                self._try_stage(w, rs, t)
+            self.tube.store(f"r{rs.rid}", did, out_mb, "host",
+                            sim.now, on_ready=stored)
+        else:
+            stored(sim, sim.now)
 
         # workflow finished?
         if all(t.name in rs.done_stages for t in meta.sinks):

@@ -5,13 +5,21 @@ import dataclasses
 
 import pytest
 
-from repro.core.api import FAASTUBE, FaaSTube
-from repro.core.topology import PCIE_PINNED, dgx_v100
+from repro.core.api import FAASTUBE, INFLESS, FaaSTube
+from repro.core.elastic_pool import ElasticPool, PoolCapacityError
+from repro.core.migration import DEVICE, HOST, RELOADING, SPILLING
+from repro.core.topology import NET, PCIE_PINNED, cluster, dgx_v100
 
 
 def _pressure_cfg(**kw):
     kw.setdefault("store_cap_mb", 64.0)
     return dataclasses.replace(FAASTUBE, **kw)
+
+
+def _two_stores(tube):
+    """48+48 MB on a 64 MB store: the second store spills the first."""
+    tube.store("p1", "d1", 48.0, "gpu0", 0.0, consumer_pos=9)
+    tube.store("p2", "d2", 48.0, "gpu0", 0.0, consumer_pos=1)
 
 
 # ------------------------------------------------------- the anchor bug ---
@@ -22,10 +30,7 @@ def test_spilled_same_device_refetch_pays_pcie_reload():
     0.001 ms shared-memory read (regression: the `src == dst` shortcut
     used to shadow the spilled branch)."""
     tube = FaaSTube(dgx_v100(), _pressure_cfg())
-    # two 48 MB outputs on a 64 MB store: the second store spills the
-    # first (queue policy: d1's consumer is further back in the queue)
-    tube.store("p1", "d1", 48.0, "gpu0", 0.0, consumer_pos=9)
-    tube.store("p2", "d2", 48.0, "gpu0", 0.0, consumer_pos=1)
+    _two_stores(tube)
     tube.sim.run(until=4.9)          # let the g2h spill complete
     assert tube.stats["migrations"] == 1
 
@@ -39,3 +44,207 @@ def test_spilled_same_device_refetch_pays_pcie_reload():
     reload_ms = done[0] - 5.0
     assert reload_ms >= 0.5 * 48.0 / (4 * PCIE_PINNED), reload_ms
     assert reload_ms > 1.0
+
+
+# --------------------------------------------- completion-driven states ---
+
+def test_spill_frees_blocks_on_completion_not_submit():
+    """SPILLING keeps the HBM blocks allocated until the g2h copy lands;
+    the capacity-blocked second store becomes ready only then."""
+    tube = FaaSTube(dgx_v100(), _pressure_cfg())
+    ready = []
+    tube.store("p1", "d1", 48.0, "gpu0", 0.0, consumer_pos=9)
+    tube.store("p2", "d2", 48.0, "gpu0", 0.0, consumer_pos=1,
+               on_ready=lambda sim, t: ready.append(t))
+    pool = tube.pools["gpu0"]
+    it = tube.items["gpu0"]["d1"]
+    assert it.state == SPILLING
+    assert pool.used_mb >= 48.0          # victim blocks NOT freed yet
+    assert pool.used_mb <= 64.0          # and d2 has not over-committed
+    assert not ready                     # d2 is waiting for the spill
+
+    tube.sim.run(until=0.5)              # mid-flight (48 MB needs ~4 ms)
+    assert it.state == SPILLING and pool.used_mb >= 48.0
+
+    tube.sim.run()
+    assert it.state == HOST
+    rec = tube.index.global_table["d1"]
+    assert rec.location == "host" and rec.device == "host"
+    assert rec.buf_id == -1              # HBM blocks released on landing
+    assert ready and ready[0] >= 3.0     # store stalled on the spill
+    assert pool.used_mb == 48.0          # only d2 resident now
+    assert pool.peak_used_mb <= 64.0
+
+
+def test_fetch_races_inflight_spill_coherently():
+    """A fetch arriving while the g2h spill is in flight reads the
+    still-valid device copy (no reload, no wait for the spill)."""
+    tube = FaaSTube(dgx_v100(), _pressure_cfg())
+    _two_stores(tube)
+    it = tube.items["gpu0"]["d1"]
+    assert it.state == SPILLING
+    done = []
+    tube.fetch("c1", "d1", "gpu1", 0.2, on_ready=lambda s, t: done.append(t))
+    tube.sim.run()
+    assert tube.stats["reloads"] == 0    # served from the HBM copy
+    assert done and done[0] < 3.9        # g2g NVLink, not spill + reload
+    assert it.state == HOST              # the spill still completed
+
+
+def test_cross_node_reload_sources_from_spill_host():
+    """Reload comes from the host the item actually spilled to — routed
+    over the inter-node network when the consumer is elsewhere — and the
+    item is rehomed onto the consumer's device on completion."""
+    tube = FaaSTube(cluster(2), _pressure_cfg())
+    tube.store("p1", "d1", 48.0, "n0:gpu0", 0.0, consumer_pos=9)
+    tube.store("p2", "d2", 48.0, "n0:gpu0", 0.0, consumer_pos=1)
+    tube.sim.run()
+    rec = tube.index.global_table["d1"]
+    assert rec.device == "n0:host" and rec.location == "host"
+
+    done = []
+    t1 = tube.sim.now
+    tube.fetch("c1", "d1", "n1:gpu0", t1,
+               on_ready=lambda s, t: done.append(t))
+    tube.sim.run()
+    assert tube.stats["reloads"] == 1
+    # must cross the 12.5 GB/s NET link from n0:host
+    assert done[0] - t1 >= 0.9 * 48.0 / NET, done[0] - t1
+    assert rec.device == "n1:gpu0" and rec.location == "device"
+    assert tube.items["n1:gpu0"]["d1"].state == DEVICE
+    assert "d1" not in tube.items["n0:gpu0"]
+
+
+def test_cross_node_host_read_of_spilled_data_pays_net():
+    """A host-side consumer on ANOTHER node reading spilled data pays
+    the inter-node NET transfer, not a free 0.001 ms shm read."""
+    tube = FaaSTube(cluster(2), _pressure_cfg())
+    tube.store("p1", "d1", 48.0, "n0:gpu0", 0.0, consumer_pos=9)
+    tube.store("p2", "d2", 48.0, "n0:gpu0", 0.0, consumer_pos=1)
+    tube.sim.run()
+    assert tube.index.global_table["d1"].device == "n0:host"
+    done = []
+    t1 = tube.sim.now
+    tube.fetch("c1", "d1", "n1:host", t1,
+               on_ready=lambda s, t: done.append(t))
+    tube.sim.run()
+    assert done and done[0] - t1 >= 0.9 * 48.0 / NET, done[0] - t1
+
+
+def test_sub_block_store_under_odd_cap_makes_progress():
+    """Block-quantized capacity accounting: with a cap that is not a
+    multiple of BLOCK_MB, a sub-block store against a nearly-full pool
+    must still spill a victim and complete (regression: raw-MB `need`
+    rounded to <= 0 while block-rounded fits() kept failing)."""
+    tube = FaaSTube(dgx_v100(), _pressure_cfg(store_cap_mb=63.0))
+    tube.store("p1", "d1", 62.0, "gpu0", 0.0, consumer_pos=9)
+    ready = []
+    tube.store("p2", "d2", 0.5, "gpu0", 0.0, consumer_pos=1,
+               on_ready=lambda sim, t: ready.append(t))
+    tube.sim.run()
+    assert ready, "sub-block store never became ready"
+    assert tube.stats["migrations"] == 1
+    assert tube.pools["gpu0"].peak_used_mb <= 64.0   # block-rounded cap
+
+
+def test_fetch_parks_on_inflight_reload():
+    """A fetch hitting a RELOADING item waits for the in-flight h2g copy
+    instead of issuing a second PCIe reload."""
+    tube = FaaSTube(dgx_v100(), _pressure_cfg(store_cap_mb=96.0))
+    tube.store("pA", "dA", 40.0, "gpu0", 0.0, consumer_pos=2)
+    tube.store("pB", "dB", 40.0, "gpu0", 1.0, consumer_pos=9)
+    tube.store("pC", "dC", 40.0, "gpu0", 2.0, consumer_pos=5)
+    tube.sim.run()
+    assert tube.items["gpu0"]["dB"].state == HOST
+    t1 = tube.sim.now
+    tube.consume("dA", "gpu0", t1)       # frees room -> prefetches dB back
+    it = tube.items["gpu0"]["dB"]
+    assert it.state == RELOADING
+    done = []
+    tube.fetch("c", "dB", "gpu0", t1, on_ready=lambda s, t: done.append(t))
+    assert len(it.waiters) == 1          # parked on the in-flight reload
+    tube.sim.run()
+    assert done and tube.stats["reloads"] == 0   # no second demand reload
+    assert it.state == DEVICE
+
+
+# --------------------------------------------------- pool + attribution ---
+
+def test_pool_free_is_idempotent():
+    pool = ElasticPool("gpu0", capacity_mb=64)
+    b, _ = pool.alloc("f", 16.0, 0.0)
+    pool.free(b, 1.0)
+    used, cached = pool.used_blocks, pool.cached_blocks
+    pool.free(b, 2.0)                    # double free: clean no-op
+    assert (pool.used_blocks, pool.cached_blocks) == (used, cached)
+
+
+def test_pool_capacity_enforced():
+    pool = ElasticPool("gpu0", capacity_mb=64)
+    pool.alloc("f", 40.0, 0.0)
+    assert not pool.fits(40.0)
+    with pytest.raises(PoolCapacityError):
+        pool.alloc("f", 40.0, 1.0)
+    # oversized single item (> whole store): force bypass, peak tracked
+    pool.alloc("f", 96.0, 2.0, force=True)
+    assert pool.used_mb > 64.0 and pool.peak_used_mb == pool.used_mb
+
+
+def test_prefetch_attributed_to_producer():
+    """consume()'s prefetch-back allocates under the item's producing
+    function — no synthetic "prefetch" function polluting the elastic
+    reservations — and runs the normal alloc accounting."""
+    tube = FaaSTube(dgx_v100(), _pressure_cfg(store_cap_mb=96.0))
+    tube.store("prodA", "dA", 40.0, "gpu0", 0.0, consumer_pos=2)
+    tube.store("prodB", "dB", 40.0, "gpu0", 1.0, consumer_pos=9)
+    tube.store("prodC", "dC", 40.0, "gpu0", 2.0, consumer_pos=5)
+    tube.sim.run()
+    assert tube.items["gpu0"]["dB"].state == HOST
+    tube.consume("dA", "gpu0", tube.sim.now)
+    pool = tube.pools["gpu0"]
+    assert "prefetch" not in pool.stats
+    assert len(pool.stats["prodB"].arrivals) == 2    # store + prefetch
+    tube.sim.run()
+    assert tube.items["gpu0"]["dB"].state == DEVICE
+
+
+# ------------------------------------------- baseline (pool="none") -------
+
+def test_lru_baseline_migrates_and_reloads_under_pressure():
+    """INFless+-style configs (pool="none") track resident bytes per
+    device, so capacity pressure actually triggers LRU migration and
+    refetches pay demand reloads."""
+    cfg = dataclasses.replace(INFLESS, store_cap_mb=64.0)
+    tube = FaaSTube(dgx_v100(), cfg)
+    tube.store("p1", "d1", 48.0, "gpu0", 0.0)
+    tube.sim.run()
+    tube.store("p2", "d2", 48.0, "gpu0", tube.sim.now)
+    tube.sim.run()
+    assert tube.stats["migrations"] == 1
+    assert tube.items["gpu0"]["d1"].state == HOST    # LRU: oldest access
+    assert tube.resident["gpu0"] <= 64.0
+
+    done = []
+    t1 = tube.sim.now
+    tube.fetch("c", "d1", "gpu0", t1, on_ready=lambda s, t: done.append(t))
+    tube.sim.run()
+    assert tube.stats["reloads"] == 1
+    assert done[0] - t1 > 1.0            # PCIe h2g, not a free shm read
+    assert tube.resident["gpu0"] <= 64.0
+
+
+def test_queue_vs_lru_victim_choice_end_to_end():
+    """Same trace, different policy: LRU evicts the oldest access (the
+    next-consumed item); queue-aware evicts the furthest-back consumer."""
+    spilled = {}
+    for policy in ("queue", "lru"):
+        tube = FaaSTube(dgx_v100(),
+                        _pressure_cfg(store_cap_mb=96.0, migration=policy))
+        tube.store("p1", "d_old", 40.0, "gpu0", 0.0, consumer_pos=1)
+        tube.store("p2", "d_mid", 40.0, "gpu0", 1.0, consumer_pos=9)
+        tube.store("p3", "d_new", 40.0, "gpu0", 2.0, consumer_pos=5)
+        tube.sim.run()
+        spilled[policy] = [d for d, it in tube.items["gpu0"].items()
+                           if it.state != DEVICE]
+    assert spilled["lru"] == ["d_old"]
+    assert spilled["queue"] == ["d_mid"]
