@@ -280,8 +280,8 @@ class PathFinder:
         every cached route (residual-aware AND pure-topology) that might
         cross the dead edge is invalidated.
         """
+        self.topo.remove(a, b)          # symmetric: both directions go
         for e in ((a, b), (b, a)):
-            self.topo.remove(*e)
             self.residual.pop(e, None)
             self.users.pop(e, None)
         self._gen += 1

@@ -41,9 +41,15 @@ class Topology:
         self.edges[(b, a)] = bw
         self.version += 1
 
-    def remove(self, a: str, b: str):
-        """Remove the directed edge a->b (if present)."""
-        if self.edges.pop((a, b), None) is not None:
+    def remove(self, a: str, b: str, *, directed: bool = False):
+        """Remove the edge a-b.  Symmetric by default — `add` always
+        inserts both directions, so a default removal can never leave a
+        half-removed edge behind (the old fail_link hazard).  Pass
+        directed=True for deliberate one-way surgery."""
+        hit = self.edges.pop((a, b), None) is not None
+        if not directed:
+            hit = (self.edges.pop((b, a), None) is not None) or hit
+        if hit:
             self.version += 1
 
     def bw(self, a: str, b: str) -> float:

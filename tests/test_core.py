@@ -32,6 +32,33 @@ def test_each_v100_gpu_has_six_nvlinks():
         assert links == 6, (g, links)
 
 
+def test_remove_is_symmetric_and_invalidates_neighbor_cache():
+    t = dgx_v100()
+    assert "gpu1" in t.neighbors("gpu0")      # prime the adjacency cache
+    v0 = t.version
+    t.remove("gpu0", "gpu1")
+    assert t.version > v0
+    assert t.bw("gpu0", "gpu1") == 0.0 and t.bw("gpu1", "gpu0") == 0.0
+    assert "gpu1" not in t.neighbors("gpu0")
+    assert "gpu0" not in t.neighbors("gpu1")
+    # deliberate one-way surgery still possible
+    t.add("gpu0", "gpu1", NVLINK_1X)
+    t.remove("gpu0", "gpu1", directed=True)
+    assert t.bw("gpu1", "gpu0") == NVLINK_1X
+    assert t.bw("gpu0", "gpu1") == 0.0
+    assert "gpu0" in t.neighbors("gpu1")
+    assert "gpu1" not in t.neighbors("gpu0")
+
+
+def test_fail_link_leaves_no_half_removed_edge():
+    pf = PathFinder(dgx_v100(), transit="gpu")
+    pf.fail_link("gpu0", "gpu3")
+    t = pf.topo
+    assert t.bw("gpu0", "gpu3") == 0.0 and t.bw("gpu3", "gpu0") == 0.0
+    assert ("gpu0", "gpu3") not in pf.residual
+    assert ("gpu3", "gpu0") not in pf.residual
+
+
 # ----------------------------------------------------------- pathfinder ---
 
 def test_multipath_beats_single_path_on_unlinked_pair():
