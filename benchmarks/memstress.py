@@ -1,0 +1,174 @@
+"""Fleet-scale memory-pressure scenario: store_cap sweep x bursty
+arrivals on the 4-node cluster.
+
+The paper's elastic-store claims (§7, Figs. 13/15b/16) rest on spilled
+intermediates paying a real PCIe reload; this scenario drives the
+completion-driven spill/reload lifecycle hard enough that victim choice
+shows up at the tail.  16 app instances (2x-batched driving / traffic /
+video, co-located so every GPU store holds outputs with *different*
+consumer positions) x 6 bursty requests on a 4-node dgx-v100 cluster,
+swept over store capacities.  Asserts, at the tightest cap:
+
+  * queue-aware migration beats LRU at the p99 (LRU evicts the
+    next-consumed item, so its consumer stalls on a demand reload;
+    queue-aware evicts the furthest-back consumer and prefetch hides
+    the reload),
+  * ElasticPool never exceeds capacity_mb on any device store, and the
+    pool="none" baselines' resident-byte accounting stays under cap,
+  * INFless+ actually exercises LRU migration (>0 migrations) instead
+    of bypassing pressure.
+
+Results land in ``BENCH_memstress.json`` (repo root), uploaded as a CI
+artifact.  ``python -m benchmarks.memstress smoke`` runs the single
+tightest-cap sweep inside a 30 s budget (the CI smoke gate);
+``python -m benchmarks.run memstress`` runs the full sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, lat_ms, p99
+from benchmarks.workloads import arrivals
+from repro.core.api import FAASTUBE, SYSTEMS, _is_dev
+from repro.core.topology import cluster, dgx_v100
+from repro.serving.executor import WorkflowEngine
+from repro.serving.workflow import WORKFLOWS
+
+N_NODES = 4
+N_APPS = 16
+REQS_PER_APP = 6
+BATCH_SCALE = 2.0       # 2x-batched tensors: 256 MB driving edges
+MIX = ("driving", "traffic", "video", "driving")
+CAPS = (384.0, 512.0, 768.0)       # MB per-device store capacity sweep
+SMOKE_BUDGET_S = 30.0
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_memstress.json")
+
+
+def build_apps(topo):
+    """Per-app 2x-batched workflows, stages round-robined over each
+    node's GPUs so co-located stores mix consumer positions."""
+    from benchmarks.fig03_motivation import scale_workflow
+    apps, placements = [], {}
+    cursor = [0] * N_NODES
+    by_node = {n: [g for g in topo.gpus if g.startswith(f"n{n}:")]
+               for n in range(N_NODES)}
+    for k in range(N_APPS):
+        base = scale_workflow(WORKFLOWS[MIX[k % len(MIX)]], BATCH_SCALE)
+        w = dataclasses.replace(base, name=f"{base.name}@{k}")
+        node = k % N_NODES
+        gpus = by_node[node]
+        gpu_stages = [s for s in w.stages if s.kind == "gpu"]
+        pl = {s.name: gpus[(cursor[node] + i) % len(gpus)]
+              for i, s in enumerate(gpu_stages)}
+        cursor[node] += len(gpu_stages)
+        placements[w.name] = pl
+        apps.append(w)
+    return apps, placements
+
+
+def run_pressure(cfg, seed: int = 0) -> WorkflowEngine:
+    topo = cluster(N_NODES, base=dgx_v100)
+    apps, placements = build_apps(topo)
+    eng = WorkflowEngine(topo, cfg, placements=placements)
+    n_sub = 0
+    for k, w in enumerate(apps):
+        for t in arrivals("bursty", REQS_PER_APP, 25.0, seed + k):
+            eng.submit_workflow(w, t)
+            n_sub += 1
+    eng.run()
+    assert len(eng.completed) == n_sub, \
+        (cfg.name, len(eng.completed), n_sub)
+    return eng
+
+
+def check_capacity(eng: WorkflowEngine, cap: float) -> float:
+    """Max device-store occupancy observed; must never exceed cap."""
+    tube = eng.tube
+    peak = 0.0
+    if tube.cfg.pool == "none":
+        # resident-byte high-water mark for the no-pool baselines
+        for dev, mb in tube.resident_peak.items():
+            if _is_dev(dev):
+                peak = max(peak, mb)
+                assert mb <= cap + 1e-6, (dev, mb, cap)
+    else:
+        for dev, pool in tube.pools.items():
+            if pool.capacity_mb == float("inf"):
+                continue               # host stores are unbounded
+            peak = max(peak, pool.peak_used_mb)
+            assert pool.peak_used_mb <= pool.capacity_mb + 1e-6, \
+                (dev, pool.peak_used_mb, pool.capacity_mb)
+    return peak
+
+
+def sweep(caps, out_path: str = DEFAULT_OUT) -> dict:
+    report = {"schema": 1, "n_workflows": N_APPS * REQS_PER_APP,
+              "cluster": f"{N_NODES}x dgx-v100", "caps": {}}
+    for cap in caps:
+        row = {}
+        for label, base in (("faastube", FAASTUBE),
+                            ("faastube-lru",
+                             dataclasses.replace(FAASTUBE, migration="lru",
+                                                 name="faastube-lru")),
+                            ("infless+", SYSTEMS["infless+"])):
+            cfg = dataclasses.replace(base, store_cap_mb=cap)
+            eng = run_pressure(cfg)
+            lats = [lat_ms(r) for r in eng.completed]
+            st = eng.tube.stats
+            peak = check_capacity(eng, cap)
+            row[label] = {
+                "p99_ms": round(p99(lats), 1),
+                "mean_ms": round(float(np.mean(lats)), 1),
+                "migrations": st["migrations"],
+                "reloads": st["reloads"],
+                "prefetches": eng.tube.migrator.reloads,
+                "peak_store_mb": round(peak, 1),
+            }
+            emit("memstress", f"cap{cap:.0f}.{label}.p99",
+                 row[label]["p99_ms"], "ms",
+                 f"mig={st['migrations']} rel={st['reloads']} "
+                 f"peak={peak:.0f}MB")
+        cut = 100 * (1 - row["faastube"]["p99_ms"]
+                     / row["faastube-lru"]["p99_ms"])
+        row["queue_vs_lru_p99_cut"] = round(cut, 1)
+        emit("memstress", f"cap{cap:.0f}.queue_vs_lru_p99_cut", cut, "%",
+             "queue-aware victim choice vs LRU, same trace")
+        report["caps"][f"{cap:.0f}"] = row
+    return report
+
+
+def main(argv=None) -> dict:
+    args = list(argv if argv is not None else sys.argv[1:])
+    smoke = "smoke" in args
+    caps = CAPS[:1] if smoke else CAPS
+    t0 = time.time()
+    report = sweep(caps)
+    wall = time.time() - t0
+    report["wall_s"] = round(wall, 1)
+    with open(DEFAULT_OUT, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("memstress", "wall_clock", wall, "s",
+         f"smoke budget: <{SMOKE_BUDGET_S:.0f}s" if smoke else "full sweep")
+
+    tight = report["caps"][f"{caps[0]:.0f}"]
+    # queue-aware migration must beat LRU at the tail under pressure
+    assert tight["queue_vs_lru_p99_cut"] >= 3.0, tight
+    # the no-pool baseline must actually exercise LRU migration
+    assert tight["infless+"]["migrations"] > 0, tight
+    # pressure must be real for the pooled config too
+    assert tight["faastube"]["migrations"] > 0, tight
+    if smoke:
+        assert wall < SMOKE_BUDGET_S, f"memstress smoke too slow: {wall:.1f}s"
+    return report
+
+
+if __name__ == "__main__":
+    main()
