@@ -10,7 +10,7 @@ import numpy as np
 
 from repro.core.api import TubeConfig
 from repro.serving.executor import WorkflowEngine
-from repro.serving.workflow import WORKFLOWS, Workflow, isolated_compute_ms
+from repro.serving.workflow import Workflow
 from benchmarks.workloads import arrivals
 
 ROWS: list[tuple] = []

@@ -11,7 +11,7 @@ import dataclasses
 from repro.core.api import INFLESS
 from repro.core.topology import dgx_v100
 from repro.serving.workflow import WORKFLOWS, Stage, Workflow
-from benchmarks.common import emit, exec_ms, p99, run_trace
+from benchmarks.common import emit, p99, run_trace
 
 
 def breakdown(eng):

@@ -21,7 +21,6 @@ from repro.core.topology import dgx_v100
 from repro.serving.executor import WorkflowEngine
 from repro.serving.workflow import WORKFLOWS, place
 from benchmarks.common import emit, lat_ms, p99, run_trace
-from benchmarks.workloads import arrivals
 
 MAPA = dataclasses.replace(FAASTUBE, g2g="direct", name="mapa")
 NO_AP = dataclasses.replace(FAASTUBE, pool="none", name="faastube-ap")

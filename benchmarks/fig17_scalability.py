@@ -12,7 +12,7 @@ from __future__ import annotations
 from repro.core.api import SYSTEMS
 from repro.core.topology import a10_server, cluster
 from repro.serving.executor import WorkflowEngine
-from repro.serving.workflow import WORKFLOWS, place
+from repro.serving.workflow import WORKFLOWS
 from benchmarks.common import emit, lat_ms, p99
 from benchmarks.workloads import arrivals
 

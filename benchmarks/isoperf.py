@@ -1,0 +1,145 @@
+"""Isolation-performance sweep: foreground SLO attainment vs background
+migration pressure (the two-class bandwidth arbiter's CI gate).
+
+One dgx-v100 server runs a latency-critical *driving* app (SLO = 1.5x
+its independent runtime, every fetch/return SLO-admitted as FOREGROUND)
+next to TWO 8x-batched *video* tenants (no SLO — throughput apps whose
+GB-scale intermediates co-locate on the 8 GPUs and blow through the
+device store).  The store cap is swept over the memstress capacities:
+the tighter the cap, the more spill/reload traffic the migration
+machinery pushes onto the same PCIe links the driving fetches need
+(tens of GB of background bytes at the tightest cap).
+
+Two arms per cap:
+
+  faastube — migration admitted as BACKGROUND class (residual bandwidth
+             only, strict per-link priority below foreground);
+  unreg    — bg_migration=False: the pre-arbiter behaviour, migration
+             submitted straight to the link simulator at parity.
+
+Asserted at the tightest memstress cap (the acceptance criterion):
+
+  * zero SLO-admitted foreground transfers exceed their slo_ms slack
+    (``PcieScheduler.fg_missed == 0`` with a nonzero tracked count), and
+  * background migration throughput stays nonzero (the class is demoted,
+    not starved).
+
+Results land in ``BENCH_isoperf.json`` (repo root), uploaded as a CI
+artifact and band-gated by ``benchmarks.band_gate``.  ``python -m
+benchmarks.isoperf smoke`` sweeps only the tightest cap inside a 30 s
+budget; ``python -m benchmarks.run isoperf`` runs the full sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+from benchmarks.common import emit, exec_ms, p99, run_mixed
+from benchmarks.fig03_motivation import scale_workflow
+from benchmarks.fig14_pcie_isolation import _slo_ms
+from benchmarks.memstress import CAPS
+from repro.core.api import FAASTUBE
+from repro.core.topology import dgx_v100
+from repro.serving.workflow import WORKFLOWS, isolated_compute_ms
+
+PARTNER_SCALE = 8.0      # video loads ~GB blocks (fig14's batch scaling)
+N_REQS = 24
+SMOKE_BUDGET_S = 30.0
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_isoperf.json")
+
+
+def run_arm(cfg, slo_d: float, f_d: float, partners, seed: int = 0) -> dict:
+    """driving (SLO-admitted) + batch video tenants (no SLO), one server."""
+    eng = run_mixed(dgx_v100, cfg,
+                    [(WORKFLOWS["driving"], "bursty", f_d)]
+                    + [(wp, "bursty", 0.0) for wp in partners],
+                    n=N_REQS, scale_ms=10.0, seed=seed)
+    sched = eng.tube.sched
+    sim = eng.tube.sim
+    st = eng.tube.stats
+    lat = [exec_ms(r) for r in eng.completed
+           if abs(r.slo_ms - slo_d) < 1e-6]
+    ok = 100 * sum(1 for x in lat if x <= slo_d) / len(lat)
+    bg_mb = sim.mb_by_class["bg"]
+    worst_excess = 0.0
+    if sched is not None and sched.slo_misses:
+        worst_excess = max(took - slack
+                           for _f, took, slack in sched.slo_misses)
+    return {
+        "fg_tracked": sched.fg_tracked if sched else 0,
+        "fg_missed": sched.fg_missed if sched else 0,
+        "worst_miss_excess_ms": round(worst_excess, 1),
+        "bg_mb": round(bg_mb, 1),
+        "bg_tput_gbps": round(bg_mb / max(sim.now, 1e-9), 2),
+        "demotions": sched.demotions if sched else 0,
+        "promotions": sched.promotions if sched else 0,
+        "migrations": st["migrations"],
+        "reloads": st["reloads"],
+        "driving_p99_ms": round(p99(lat), 1),
+        "driving_slo_ok_pct": round(ok, 1),
+    }
+
+
+def sweep(caps) -> dict:
+    slo_d = _slo_ms("driving")
+    f_d = slo_d / isolated_compute_ms(WORKFLOWS["driving"])
+    partners = [
+        dataclasses.replace(scale_workflow(WORKFLOWS["video"],
+                                           PARTNER_SCALE), name=f"video{i}")
+        for i in range(2)]
+    report = {"schema": 1, "server": "dgx-v100",
+              "fg_slo_ms": round(slo_d, 1), "caps": {}}
+    for cap in caps:
+        row = {}
+        for label, base in (
+                ("faastube", FAASTUBE),
+                ("unreg", dataclasses.replace(FAASTUBE, bg_migration=False,
+                                              name="faastube-unreg"))):
+            cfg = dataclasses.replace(base, store_cap_mb=cap)
+            row[label] = m = run_arm(cfg, slo_d, f_d, partners)
+            emit("isoperf", f"cap{cap:.0f}.{label}.fg_missed",
+                 m["fg_missed"], "transfers",
+                 f"of {m['fg_tracked']} tracked; "
+                 f"slo_ok={m['driving_slo_ok_pct']:.0f}% "
+                 f"p99={m['driving_p99_ms']:.0f}ms")
+            emit("isoperf", f"cap{cap:.0f}.{label}.bg_tput",
+                 m["bg_tput_gbps"], "GB/s",
+                 f"bg={m['bg_mb']:.0f}MB mig={m['migrations']} "
+                 f"rel={m['reloads']}")
+        report["caps"][f"{cap:.0f}"] = row
+    return report
+
+
+def main(argv=None) -> dict:
+    args = list(argv if argv is not None else sys.argv[1:])
+    smoke = "smoke" in args
+    caps = CAPS[:1] if smoke else CAPS
+    t0 = time.time()
+    report = sweep(caps)
+    wall = time.time() - t0
+    report["wall_s"] = round(wall, 1)
+    with open(DEFAULT_OUT, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit("isoperf", "wall_clock", wall, "s",
+         f"smoke budget: <{SMOKE_BUDGET_S:.0f}s" if smoke else "full sweep")
+
+    tight = report["caps"][f"{caps[0]:.0f}"]["faastube"]
+    # the acceptance criterion: under the tightest memstress cap, no
+    # SLO-admitted foreground transfer misses its slack while background
+    # migration keeps moving bytes
+    assert tight["fg_tracked"] > 0, tight
+    assert tight["fg_missed"] == 0, tight
+    assert tight["migrations"] > 0, tight
+    assert tight["bg_mb"] > 0, tight
+    if smoke:
+        assert wall < SMOKE_BUDGET_S, f"isoperf smoke too slow: {wall:.1f}s"
+    return report
+
+
+if __name__ == "__main__":
+    main()

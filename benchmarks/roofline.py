@@ -91,7 +91,7 @@ def model_flops(arch: str, shape_name: str) -> float:
 
 
 def _tokens_per_chip(cfg, shape, rules, mesh) -> int:
-    from repro.distributed.mesh import mesh_axis_size, spec_for
+    from repro.distributed.mesh import spec_for
     spec = spec_for((shape.global_batch, max(shape.seq_len, 2)),
                     ("batch", "seq"), rules, mesh)
     shards = 1
@@ -125,7 +125,6 @@ def memory_bytes(rec: dict, arch: str, shape_name: str) -> float:
     act = cfg.n_layers * C_ACT * toks * cfg.d_model * 2
 
     if shape.kind == "train":
-        from repro.launch.dryrun import opt_state_dtype
         from repro.training.train_step import default_accum
         accum = default_accum(shape, mesh, cfg)
         w_eff = _gathered_weight_bytes(cfg, rules, mesh)

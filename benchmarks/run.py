@@ -31,6 +31,7 @@ BENCHES = [
 EXTRAS = [
     "fleet",        # 512 concurrent workflows on a 16-node cluster
     "memstress",    # store_cap sweep under bursty memory pressure
+    "isoperf",      # fg SLO attainment vs bg migration pressure
 ]
 
 

@@ -8,8 +8,7 @@ of an architecture (same family / block pattern, tiny dims).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -37,7 +37,7 @@ in TubeConfig.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 
 from repro.core.elastic_pool import BLOCK_MB, ElasticPool, blocks_for
 from repro.core.index import DataIndex, DataRecord
@@ -45,7 +45,7 @@ from repro.core.linksim import IPC_MS, LinkSim, alloc_ms
 from repro.core.migration import (
     DEVICE, HOST, RELOADING, SPILLING, Migrator, StoredItem)
 from repro.core.pathfinder import PathFinder
-from repro.core.pcie_scheduler import PcieScheduler
+from repro.core.pcie_scheduler import BACKGROUND, PcieScheduler
 from repro.core.pinned_buffer import CircularPinnedBuffer
 from repro.core.topology import PCIE_PINNED, Topology
 
@@ -64,6 +64,11 @@ class TubeConfig:
     unified_index: bool = True
     internode: str = "pipelined"  # pipelined | sequential
     store_cap_mb: float = 1024.0
+    # admit spill/prefetch transfers as BACKGROUND-class flows (residual
+    # bandwidth only); False submits them straight to the link simulator
+    # at parity with foreground fetches (the pre-arbiter behaviour, kept
+    # as the contrast arm for the isolation benchmarks)
+    bg_migration: bool = True
 
 
 # INFless+ moves data through pageable host memory (shared-memory data
@@ -169,6 +174,17 @@ class FaaSTube:
             + sum(self._mb_needed(size)
                   for size, _f, _g in self._pending.get(device, ()))
 
+    def _headroom_mb(self, device: str) -> float:
+        """Capacity left for opportunistic prefetch: the pool's headroom
+        (or the resident-byte headroom for pool="none") minus pending
+        committed allocations."""
+        pend = sum(self._mb_needed(size)
+                   for size, _f, _g in self._pending.get(device, ()))
+        if self.cfg.pool == "none":
+            return self.cfg.store_cap_mb \
+                - self.resident.get(device, 0.0) - pend
+        return self._pool(device).headroom_mb - pend
+
     def _try_alloc(self, device: str, func: str, size_mb: float,
                    now: float):
         """(buf_id, cost_ms) if the bytes fit on device now, else None.
@@ -260,6 +276,33 @@ class FaaSTube:
             self._pending.pop(device, None)
 
     # ---------------------------------------------------- spill / reload --
+    def _submit_migration(self, owner: str, src: str, dst: str,
+                          size_mb: float, t: float, kind: str,
+                          on_done=None):
+        """Submit a spill/prefetch transfer as a BACKGROUND-class flow.
+
+        Migration traffic is admitted through the PCIe scheduler under
+        its own flow id (one per transfer) so it is granted only the
+        residual bandwidth left by SLO-admitted foreground fetches —
+        never submitted straight to the link simulator where it would
+        contend at parity.  Demand reloads are NOT routed here: they
+        block a foreground fetch and ride that fetch's own foreground
+        admission (see fetch/_demand_reload).
+        """
+        if self.sched is None or not self.cfg.bg_migration:
+            return self._submit_path(owner, src, dst, size_mb, t, kind,
+                                     on_done=on_done)
+        flow = self.migrator.flow(owner)
+        self.migrator.bg_submitted_mb += size_mb
+        self.sched.admit(flow, size_mb, cls=BACKGROUND, t=t)
+
+        def finish(sim, tr):
+            self.sched.complete(flow, t=sim.now)
+            if on_done is not None:
+                on_done(sim, tr)
+        return self._submit_path(flow, src, dst, size_mb, t, kind,
+                                 on_done=finish)
+
     def _spill(self, v: StoredItem, device: str, now: float):
         """DEVICE -> SPILLING.  The HBM copy stays valid (and allocated)
         until the g2h transfer completes."""
@@ -269,8 +312,8 @@ class FaaSTube:
 
         def landed(sim, tr=None):
             self._spill_complete(v, device, sim.now)
-        self._submit_path(v.func or "migrate", device, v.host, v.size_mb,
-                          now, "g2h", on_done=landed)
+        self._submit_migration(v.func or "migrate", device, v.host,
+                               v.size_mb, now, "g2h", on_done=landed)
 
     def _spill_complete(self, v: StoredItem, device: str, t: float):
         """SPILLING -> HOST: free the HBM blocks and flip the index
@@ -299,7 +342,14 @@ class FaaSTube:
 
         def grant(t, buf, cost):
             if self.items.get(home, {}).get(item.data_id) is not item:
+                # consumed while waiting for room: the fetch can never be
+                # served, but its foreground admission must still be
+                # released or the flow leaks (refs never reach 0 and its
+                # rate_least shrinks the background residual forever).
+                # No t: an unserved transfer is not an SLO miss.
                 self._unalloc(dst, buf, item.size_mb, t)
+                if self.sched:
+                    self.sched.complete(func)
                 return
             self.stats["alloc_ms"] += cost
             item.held = dst
@@ -422,12 +472,15 @@ class FaaSTube:
             self.stats["alloc_ms"] += c
             t0 += c
 
+        # foreground-class admission with the caller's SLO context; a
+        # demand reload of spilled data below rides this same admission
+        # (it blocks this fetch, so it is foreground work, not migration)
         if self.sched:
-            self.sched.admit(func, rec.size_mb, slo_ms, infer_ms)
+            self.sched.admit(func, rec.size_mb, slo_ms, infer_ms, t=now)
 
         def done(sim, tr=None):
             if self.sched:
-                self.sched.complete(func)
+                self.sched.complete(func, t=sim.now)
             if on_ready:
                 on_ready(sim, sim.now)
 
@@ -464,6 +517,26 @@ class FaaSTube:
         else:                                # host -> device
             self._h2g(func, src if src else _host_of(dst), dst,
                       rec.size_mb, t0, done)
+
+    def put(self, func: str, src_dev: str, size_mb: float, now: float, *,
+            slo_ms: float = 1e9, infer_ms: float = 0.0, on_done=None):
+        """Return an output to the host (g2h), SLO-admitted like a fetch.
+
+        Executor return copies used to bypass admission entirely and
+        contend at the default DRR weight; routing them here keeps every
+        foreground byte on the link under the scheduler's rate control.
+        """
+        if self.sched:
+            self.sched.admit(func, size_mb, slo_ms, infer_ms, t=now)
+
+        def done(sim, tr=None):
+            if self.sched:
+                self.sched.complete(func, t=sim.now)
+            if on_done is not None:
+                on_done(sim, tr)
+        return self._submit_path(func, src_dev, _host_of(src_dev), size_mb,
+                                 now, "g2h", on_done=done,
+                                 multipath=self.cfg.h2g == "parallel")
 
     # ----------------------------------------------------------- methods --
     def _submit_path(self, func, src, dst, size_mb, t, kind, on_done=None,
@@ -571,7 +644,7 @@ class FaaSTube:
         self._drain_pending(freed_dev, now)
         if self.cfg.migration != "queue":
             return
-        space = self.cfg.store_cap_mb - self._held_mb(freed_dev)
+        space = self._headroom_mb(freed_dev)
         spilled = list(self.items.get(freed_dev, {}).values())
         for p in self.migrator.pick_prefetch(spilled, space):
             self._prefetch(p, freed_dev, now)
@@ -598,5 +671,5 @@ class FaaSTube:
 
         def back(sim, tr=None, p=p):
             self._reload_complete(p, prec, device, sim)
-        self._submit_path(p.func or "prefetch", src_host, device,
-                          p.size_mb, now + cost, "h2g", on_done=back)
+        self._submit_migration(p.func or "prefetch", src_host, device,
+                               p.size_mb, now + cost, "h2g", on_done=back)

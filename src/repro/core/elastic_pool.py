@@ -99,6 +99,12 @@ class ElasticPool:
     def used_mb(self) -> float:
         return self.used_blocks * BLOCK_MB
 
+    @property
+    def headroom_mb(self) -> float:
+        """Capacity left before alloc() would raise PoolCapacityError —
+        what the store facade may hand to background prefetch reloads."""
+        return self.capacity_mb - self.used_mb
+
     def _record(self, t):
         self.timeline.append((t, self.pool_mb))
 

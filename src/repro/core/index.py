@@ -14,7 +14,7 @@ visible everywhere without an extra RPC (write-through semantics).
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 LOCAL_LOOKUP_MS = 0.002
 GLOBAL_LOOKUP_MS = 0.05

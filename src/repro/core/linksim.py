@@ -10,6 +10,20 @@ policy per link:
   drr  — deficit-round-robin weighted by the scheduler's per-function rate
          allocations (FaaSTube's proportional batched triggering)
 
+Traffic classes (§7 migration isolation): a function registered as
+background via `set_func_class(func, "bg")` keeps its own DRR ring per
+link, served only when no foreground chunk is available on that link —
+strict priority at chunk granularity, so SLO-admitted foreground floors
+survive any amount of spill/reload traffic.  A fully-arrived foreground
+burst is never preempted by a background arrival (the newcomer just
+queues); a background burst IS preempted by any foreground arrival at
+the next chunk boundary, and background fills foreground arrival gaps
+(work conservation — that idle time is the "residual bandwidth" the
+scheduler grants the class).  Per-class delivered MB is tallied in
+`mb_by_class` for the isolation benchmarks.  With no background
+functions registered, every path below is byte-identical to the
+single-class engine.
+
 Engine design (the burst-coalesced event engine)
 ------------------------------------------------
 The original engine simulated one heap event per chunk-hop, which put
@@ -285,7 +299,10 @@ class LinkSim:
         self._gen: dict[tuple, int] = {}
         self._queues: dict[tuple, dict[str, deque]] = {}
         self._fifo: dict[tuple, deque] = {}
-        self._rr: dict[tuple, deque] = {}
+        self._rr: dict[tuple, deque] = {}        # foreground DRR ring
+        self._rrb: dict[tuple, deque] = {}       # background DRR ring
+        self._cls_bg: set[str] = set()           # funcs in the bg class
+        self.mb_by_class = {"fg": 0.0, "bg": 0.0}
         self._deficit: dict[tuple, dict[str, float]] = {}
         self._wake: dict[tuple, float] = {}
         self.weights: dict[str, float] = {}
@@ -313,6 +330,26 @@ class LinkSim:
                     svc.replayed = max(svc.replayed, picks)
         self.weights[func] = weight
 
+    def set_func_class(self, func: str, cls: str):
+        """Assign func to a traffic class ("fg" default, "bg" for
+        migration traffic).  Background funcs queue on a separate DRR
+        ring per link that is only served when no foreground chunk is
+        available there.  Class membership follows the set_rate_weight
+        contract: it outlives individual transfers and is evicted by
+        clear_func."""
+        if cls == "bg":
+            self._cls_bg.add(func)
+        else:
+            self._cls_bg.discard(func)
+
+    def _ring(self, link, func, create: bool = False):
+        """The DRR ring (fg or bg) func belongs to on this link."""
+        rings = self._rrb if func in self._cls_bg else self._rr
+        rr = rings.get(link)
+        if rr is None and create:
+            rr = rings[link] = deque()
+        return rr
+
     def clear_func(self, func: str):
         """Evict func's rate weight and per-link deficit credit — bounds
         the growth of `weights` / `_deficit` across long traces.
@@ -328,6 +365,7 @@ class LinkSim:
             return
         self._pending_clear.discard(func)
         self.weights.pop(func, None)
+        self._cls_bg.discard(func)
         self._drop_func_state(func)
 
     def _drop_func_state(self, func: str):
@@ -447,8 +485,8 @@ class LinkSim:
             dq = self._queues.get(link, {}).get(func)
             if dq:
                 b, fut = self._avail_front(dq, self.now)
-                rr = self._rr.setdefault(link, deque())
                 if b is not None:
+                    rr = self._ring(link, func, create=True)
                     if func not in rr:
                         rr.append(func)       # rejoin at the tail
                 elif fut < _INF:
@@ -488,12 +526,10 @@ class LinkSim:
             f.append(b)
         else:
             # arrival-order rr membership: the arriving burst's first
-            # chunk is available NOW, so the function (re)joins the ring
-            # at the tail exactly as a chunk arrival would in the
-            # chunk-exact engine
-            rr = self._rr.get(link)
-            if rr is None:
-                rr = self._rr[link] = deque()
+            # chunk is available NOW, so the function (re)joins its
+            # class's ring at the tail exactly as a chunk arrival would
+            # in the chunk-exact engine
+            rr = self._ring(link, b.func, create=True)
             if b.func not in rr:
                 rr.append(b.func)
         svc = self._active.get(link)
@@ -503,13 +539,17 @@ class LinkSim:
             # A new entry arrived mid-burst: preemption point is the next
             # chunk boundary.  A burst whose remaining chunks all already
             # arrived is NOT preempted by FIFO (it drains older chunks
-            # first anyway) nor by a same-function entry (within one
-            # function, chunks are served in arrival order either way);
-            # a different function under DRR always preempts, and ANY
-            # arrival preempts a burst still waiting on future chunks —
-            # the chunk-exact engine would fill those idle gaps.
+            # first anyway), nor by a same-function entry (within one
+            # function, chunks are served in arrival order either way),
+            # nor by a BACKGROUND arrival against a foreground burst
+            # (class priority: migration waits for the link); any other
+            # DRR arrival preempts, and any arrival preempts a burst
+            # still waiting on future chunks — the chunk-exact engine
+            # would fill those idle gaps.
             arrived = svc.max_avail <= self.now + 1e-12
-            if arrived and (self.policy == "fifo" or b.func == svc.func):
+            if arrived and (self.policy == "fifo" or b.func == svc.func
+                            or (b.func in self._cls_bg
+                                and svc.func not in self._cls_bg)):
                 return
             self._truncate(svc, self._keep_count(svc))
 
@@ -535,10 +575,20 @@ class LinkSim:
 
     # ------------------------------------------------------------- picks --
     def _pick_drr(self, link):
-        """Port of the chunk-exact DRR pick over burst-front chunks."""
+        """Class-priority DRR pick: serve the foreground ring; only when
+        it yields no available chunk may the background ring send one
+        (strict priority at chunk granularity — the background class
+        gets exactly the link's residual capacity)."""
+        f, b = self._pick_ring(link, self._rr.get(link))
+        if b is None and self._rrb:
+            f, b = self._pick_ring(link, self._rrb.get(link))
+        return f, b
+
+    def _pick_ring(self, link, rr):
+        """Port of the chunk-exact DRR pick over one ring's burst-front
+        chunks."""
         now = self.now
         q = self._queues[link]
-        rr = self._rr.get(link)
         if not rr:
             return None, None
         dd = self._deficit.get(link)
@@ -786,7 +836,7 @@ class LinkSim:
             if b not in dq:
                 dq.appendleft(b)
             if self.policy == "drr":
-                rr = self._rr.setdefault(link, deque())
+                rr = self._ring(link, b.func, create=True)
                 if b.func not in rr:
                     a = _seg_at(b.avail, b.taken)
                     # rr membership is only ever evaluated at pick time —
@@ -862,6 +912,10 @@ class LinkSim:
 
     def _finish_transfer(self, tr):
         tr.t_done = self.now
+        # per-class delivered bytes (before on_done, which may evict the
+        # function's class registration via the scheduler)
+        cls = "bg" if tr.func in self._cls_bg else "fg"
+        self.mb_by_class[cls] += tr.size_mb
         left = self._func_tr.get(tr.func, 1) - 1
         self._func_tr[tr.func] = left
         if tr.on_done is not None:

@@ -25,6 +25,7 @@ State flips happen on *transfer completion*, never at submit time:
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
 
 DEVICE = "device"        # resident in a device store
@@ -63,6 +64,20 @@ class Migrator:
         self.policy = policy
         self.migrations = 0
         self.reloads = 0
+        # background-class flow bookkeeping: every spill/prefetch
+        # transfer is admitted to the PCIe scheduler under its own flow
+        # id so migration traffic rides the BACKGROUND class (residual
+        # bandwidth only) instead of contending with SLO fetches
+        self._flow_seq = itertools.count()
+        self.bg_submitted_mb = 0.0
+
+    def flow(self, owner: str) -> str:
+        """A unique background flow id for one migration transfer.
+
+        ``owner`` (the producing function) is kept in the name for
+        traceability, but the id is unique so a migration flow can never
+        collide with the owner's own foreground admission."""
+        return f"mig{next(self._flow_seq)}:{owner}"
 
     def pick_victims(self, items: list[StoredItem], need_mb: float
                      ) -> list[StoredItem]:

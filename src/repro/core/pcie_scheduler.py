@@ -1,23 +1,51 @@
-"""SLO-aware PCIe transfer scheduling (paper §6.1).
+"""SLO-aware PCIe transfer scheduling (paper §6.1) with two traffic
+classes (paper §7: migration must not starve foreground fetches).
 
-Rate_least(f) = data_size / (L_slo - L_infer): the minimum bandwidth that
-still meets f's SLO.  The scheduler admits each function with that weight
-on the link simulator's DRR queues (the simulator's chunk interleaving IS
-the paper's proportional batched triggering), and grants the residual idle
-bandwidth to the function with the tightest SLO.
+Foreground (``FOREGROUND``): SLO-admitted fetches.  Rate_least(f) =
+data_size / (L_slo - L_infer) — the minimum bandwidth that still meets
+f's SLO.  The scheduler admits each function with that weight on the
+link simulator's DRR queues (the simulator's chunk interleaving IS the
+paper's proportional batched triggering).  When every admitted flow is
+foreground, the residual idle bandwidth goes to the function with the
+tightest SLO.
+
+Background (``BACKGROUND``): spill / reload / prefetch migration
+traffic.  Background flows are granted only the *residual* bandwidth
+``bw_all - sum(rate_least)``, split evenly among them; the grant is
+re-derived on every admit/complete, so background is demoted the moment
+a foreground flow arrives (its rate_least shrinks the residual) and
+promoted back as foreground flows drain.  The link simulator enforces
+the class boundary per link: a background chunk is dispatched only when
+no foreground chunk is available on that link (strict priority at chunk
+granularity), so a foreground flow's floor survives even when the
+aggregate residual is larger than any single link.
 
 Weight churn interacts with the burst-coalesced engine: every
 `set_rate_weight` whose value actually changes checkpoints the in-flight
 burst's deficit replay at the old weight (see linksim).  `_reweigh` is
 therefore careful to only push weights that changed, and `complete`
-evicts the departed function's weight/deficit state from the simulator
-once its transfers have drained.
+evicts the departed function's weight/deficit/class state from the
+simulator once its transfers have drained.
+
+``admit(..., t=now)`` / ``complete(..., t=now)`` additionally track
+per-transfer SLO attainment for foreground flows with a real SLO: a
+flow whose completion exceeds its slack (slo_ms - infer_ms) is counted
+in ``fg_missed`` and recorded in ``slo_misses`` — the signal the
+isoperf CI gate asserts on.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
 
 from repro.core.linksim import LinkSim
+
+FOREGROUND = "fg"
+BACKGROUND = "bg"
+
+#: slo_ms at or above this is "no real SLO" (the 1e9 default used by
+#: best-effort fetches) — admitted, but excluded from miss accounting.
+SLO_UNTRACKED_MS = 1e8
 
 
 @dataclass
@@ -26,6 +54,8 @@ class _Flow:
     size_mb: float
     slo_ms: float
     infer_ms: float
+    cls: str = FOREGROUND
+    refs: int = 1        # concurrent admissions under this func id
 
     @property
     def rate_least(self) -> float:       # GB/s == MB/ms
@@ -34,32 +64,126 @@ class _Flow:
 
 
 class PcieScheduler:
-    def __init__(self, sim: LinkSim, bw_all: float):
+    def __init__(self, sim: LinkSim, bw_all: float, *,
+                 bg_floor: float = 1e-3):
         self.sim = sim
         self.bw_all = bw_all
+        #: minimum aggregate background weight when foreground demand
+        #: oversubscribes bw_all (keeps bg flows defined; the per-link
+        #: class priority, not this number, is what protects foreground)
+        self.bg_floor = bg_floor
         self.flows: dict[str, _Flow] = {}
+        self.bg_flows: dict[str, _Flow] = {}
+        # class-churn observability
+        self.demotions = 0       # bg grant shrunk by a foreground admit
+        self.promotions = 0      # bg grant regrown by a foreground exit
+        # per-transfer SLO attainment (foreground flows admitted with t=)
+        self.fg_tracked = 0
+        self.fg_missed = 0
+        self.slo_misses: list[tuple[str, float, float]] = []
+        self._admit_t: dict[str, deque] = {}
 
-    def admit(self, func: str, size_mb: float, slo_ms: float, infer_ms: float):
-        self.flows[func] = _Flow(func, size_mb, slo_ms, infer_ms)
+    # ------------------------------------------------------------ admit ---
+    def admit(self, func: str, size_mb: float, slo_ms: float = 1e9,
+              infer_ms: float = 0.0, *, cls: str = FOREGROUND,
+              t: float | None = None):
+        """Admit one transfer.  Concurrent admissions under the same
+        func id (a fan-in stage fetching several deps) are refcounted:
+        the func keeps ONE DRR weight (latest SLO context wins) but
+        stays admitted — and counted in the residual — until every
+        admission completes, and each tracked admission gets its own
+        FIFO-paired SLO-miss check."""
+        if cls == BACKGROUND:
+            fl = self.bg_flows.get(func)
+            if fl is not None:
+                fl.refs += 1
+            else:
+                self.bg_flows[func] = _Flow(func, size_mb, slo_ms,
+                                            infer_ms, cls)
+                self.sim.set_func_class(func, BACKGROUND)
+        else:
+            fl = self.flows.get(func)
+            if fl is not None:
+                fl.refs += 1
+                fl.size_mb, fl.slo_ms, fl.infer_ms = \
+                    size_mb, slo_ms, infer_ms
+            else:
+                self.flows[func] = _Flow(func, size_mb, slo_ms, infer_ms,
+                                         cls)
+                if self.bg_flows:
+                    # a NEW foreground flow shrinks the residual grant;
+                    # a refs bump re-uses the existing floor
+                    self.demotions += 1
+            if t is not None and slo_ms < SLO_UNTRACKED_MS:
+                self._admit_t.setdefault(func, deque()).append(
+                    (t, slo_ms - infer_ms))
         self._reweigh()
 
-    def complete(self, func: str):
-        self.flows.pop(func, None)
-        # bound weights/_deficit growth across long traces: evict the
-        # departed function's state once its transfers have drained
+    def complete(self, func: str, t: float | None = None):
+        fl = self.flows.get(func)
+        if fl is None:
+            bfl = self.bg_flows.get(func)
+            if bfl is not None:
+                bfl.refs -= 1
+                if bfl.refs > 0:
+                    return
+                del self.bg_flows[func]
+        else:
+            # one admission record retires per completion; the miss math
+            # only runs when the caller supplies the completion time —
+            # complete(func) without t releases an admission that was
+            # never served (an aborted demand reload) without charging a
+            # phantom miss.  Pairing is FIFO per func id: exact as long
+            # as concurrent same-func admissions share their admit time
+            # and slack (true for the executor, which fetches a stage's
+            # deps in one loop at one sim.now — callers staggering
+            # tracked admissions under one func id would need tickets)
+            pend = self._admit_t.get(func)
+            if pend:
+                t_admit, slack = pend.popleft()
+                if not pend:
+                    del self._admit_t[func]
+                if t is not None:
+                    self.fg_tracked += 1
+                    if t - t_admit > slack + 1e-9:
+                        self.fg_missed += 1
+                        self.slo_misses.append((func, t - t_admit, slack))
+            fl.refs -= 1
+            if fl.refs > 0:
+                return          # siblings still in flight: keep the flow
+            del self.flows[func]
+            if self.bg_flows:
+                # the flow's LAST completion regrows the residual grant
+                self.promotions += 1
+        # bound weights/_deficit/class growth across long traces: evict
+        # the departed function's state once its transfers have drained
         self.sim.clear_func(func)
         self._reweigh()
 
-    def _reweigh(self):
-        if not self.flows:
-            return
+    # ------------------------------------------------------------ weights -
+    def residual_bw(self) -> float:
+        """Bandwidth left after every foreground floor: the background
+        class's aggregate grant."""
         total_least = sum(f.rate_least for f in self.flows.values())
-        scale = min(1.0, self.bw_all / max(total_least, 1e-9))
+        return max(self.bw_all - total_least, 0.0)
+
+    def _reweigh(self):
+        total_least = sum(f.rate_least for f in self.flows.values())
         idle = max(self.bw_all - total_least, 0.0)
-        tightest = min(self.flows.values(),
-                       key=lambda f: f.slo_ms - f.infer_ms)
-        for f in self.flows.values():
-            w = f.rate_least * scale
-            if f.func == tightest.func:
-                w += idle
-            self.sim.set_rate_weight(f.func, w)
+        if self.flows:
+            scale = min(1.0, self.bw_all / max(total_least, 1e-9))
+            tightest = min(self.flows.values(),
+                           key=lambda f: f.slo_ms - f.infer_ms)
+            for f in self.flows.values():
+                w = f.rate_least * scale
+                if f.func == tightest.func and not self.bg_flows:
+                    # no background class active: the idle bandwidth goes
+                    # to the tightest-SLO foreground flow (§6.1 rule)
+                    w += idle
+                self.sim.set_rate_weight(f.func, w)
+        if self.bg_flows:
+            # residual-bandwidth grant, split evenly across bg flows;
+            # recomputed here on every admit/complete = demote/promote
+            w = max(idle, self.bg_floor) / len(self.bg_flows)
+            for f in self.bg_flows.values():
+                self.sim.set_rate_weight(f.func, w)

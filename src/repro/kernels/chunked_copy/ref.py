@@ -1,8 +1,6 @@
 """Pure-jnp oracles for slab gather/scatter."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 
 def gather_chunks_ref(src, idx):
     return src[idx]

@@ -23,7 +23,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import all_cells, get_arch, get_shape
-from repro.distributed.mesh import sharding_for
 from repro.launch.mesh import make_production_mesh
 from repro.models import io
 from repro.models import model as M
@@ -48,7 +47,6 @@ def collective_bytes(hlo_text: str) -> dict:
         if not m or "=" not in line:
             continue
         kind = m.group(1)
-        lhs = line.split("=")[0]
         # result shape annotations live right after '=' on the rhs
         rhs = line.split("=", 1)[1]
         sm = SHAPE_RE.search(rhs)

@@ -90,7 +90,6 @@ def parse_computations(hlo: str) -> dict[str, Computation]:
     cur: Computation | None = None
     entry_name = None
     for line in hlo.splitlines():
-        m = _COMP_HEADER.match(line.strip()) if "{" in line else None
         if line.startswith(("ENTRY", "%")) and "->" in line and line.rstrip().endswith("{"):
             name = line.split("(")[0].replace("ENTRY", "").strip().lstrip("%").strip()
             cur = Computation(name)

@@ -12,9 +12,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
-import jax
 
 from repro.configs import get_arch
 from repro.configs.base import ShapeSpec

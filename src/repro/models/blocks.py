@@ -8,8 +8,8 @@ O(depth), which keeps 66 dry-run compiles tractable (DESIGN.md §5).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Optional
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,7 @@ from repro.models import layers as L
 from repro.models import mamba as mamba_mod
 from repro.models import moe as moe_mod
 from repro.models import xlstm as xlstm_mod
-from repro.models.param import PSpec, stack
+from repro.models.param import PSpec
 
 
 @dataclass

@@ -7,7 +7,7 @@ in/out shardings) — guaranteeing the three never drift apart.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import zlib

@@ -258,10 +258,18 @@ class WorkflowEngine:
                 def returned(sim2, tr):
                     self._complete(rs)
                 gpu = self._gpu_of(w, s)
-                self.tube._submit_path(
-                    f"r{rs.rid}:ret", gpu, _host_of(gpu),
-                    ret_mb, sim.now, "g2h", on_done=returned,
-                    multipath=self.cfg.h2g == "parallel")
+                # the return copy carries the request's SLO context down
+                # so it is foreground-admitted like any fetch (it used to
+                # bypass the scheduler and contend at the default weight).
+                # Its slack is what remains of the request's exec budget
+                # (SLO minus data passing + compute so far, the §9.2
+                # no-queueing accounting) — not a fresh full slo_ms.
+                rem = rs.slo_ms
+                if rs.slo_ms < 1e8:
+                    rem = max(rs.slo_ms - rs.h2g_ms - rs.g2g_ms
+                              - rs.compute_ms, 1e-3)
+                self.tube.put(f"r{rs.rid}:ret", gpu, ret_mb, sim.now,
+                              slo_ms=rem, on_done=returned)
                 return
             self._complete(rs)
 

@@ -15,7 +15,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.models.param import PSpec, is_pspec, tree_map
+from repro.models.param import PSpec, tree_map
 
 _QBLOCK = 128
 _QMIN_SIZE = 65_536     # leaves smaller than this stay f32

@@ -1,7 +1,5 @@
 """FaaSTube core invariants: pathfinder, linksim, pool, migration,
 scheduler, index — unit + property tests."""
-import pytest
-
 from _hyp import given, settings, st
 
 from repro.core.elastic_pool import BLOCK_MB, ElasticPool
@@ -11,7 +9,7 @@ from repro.core.migration import Migrator, StoredItem
 from repro.core.pathfinder import PathFinder
 from repro.core.pcie_scheduler import PcieScheduler
 from repro.core.topology import (
-    NVLINK_1X, NVLINK_2X, a10_server, cluster, dgx_a100, dgx_v100, tpu_torus)
+    NVLINK_1X, NVLINK_2X, dgx_v100, tpu_torus)
 
 
 # ------------------------------------------------------------ topology ----
@@ -94,7 +92,6 @@ def test_contention_awareness():
     p1 = pf.select_paths("f1", "gpu0", "gpu1")
     e1 = {e for p in p1 for e in zip(p.path, p.path[1:])}
     p2 = pf.select_paths("f2", "gpu2", "gpu3")
-    free_phase_edges = {e for p in p2 for e in zip(p.path, p.path[1:])}
     # gpu2->gpu3 has its own direct link; first selected path must be free
     first = p2[0]
     for e in zip(first.path, first.path[1:]):

@@ -3,8 +3,6 @@ hypothesis sweeps over shapes/dtypes."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-
 from _hyp import given, settings, st
 
 from repro.kernels.chunked_copy import (

@@ -1,0 +1,235 @@
+"""PcieScheduler admission math + two-class bandwidth arbitration.
+
+Direct unit coverage (previously only exercised end-to-end through the
+benchmarks): rate_least scaling under oversubscription, the idle-
+bandwidth grant to the tightest-SLO flow, weight/deficit eviction on
+complete, the background class's residual grant with demotion/promotion
+churn, per-link class priority, and per-transfer SLO-miss accounting.
+"""
+import dataclasses
+
+from repro.core.api import FAASTUBE, FaaSTube
+from repro.core.linksim import LinkSim
+from repro.core.pcie_scheduler import BACKGROUND, PcieScheduler
+from repro.core.topology import dgx_v100
+
+# gpu0 -> gpu2 is a single 24 GB/s NVLink on the dgx_v100 topology
+LINK_BW = 24.0
+
+
+# ------------------------------------------------------ admission math ----
+
+def test_rate_least_is_size_over_slack():
+    sim = LinkSim(dgx_v100(), policy="drr")
+    sched = PcieScheduler(sim, bw_all=48.0)
+    sched.admit("only", size_mb=30.0, slo_ms=13.0, infer_ms=3.0)  # 3 MB/ms
+    # sole flow is also the tightest: floor + all idle bandwidth
+    assert abs(sim.weights["only"] - (3.0 + (48.0 - 3.0))) < 1e-9
+
+
+def test_oversubscription_scales_floors_proportionally():
+    sim = LinkSim(dgx_v100(), policy="drr")
+    sched = PcieScheduler(sim, bw_all=10.0)
+    sched.admit("a", 100.0, 11.0, 1.0)    # wants 10
+    sched.admit("b", 300.0, 31.0, 1.0)    # wants 10
+    # both scaled by bw_all / total_least = 0.5, no idle left
+    assert abs(sim.weights["a"] - 5.0) < 1e-9
+    assert abs(sim.weights["b"] - 5.0) < 1e-9
+    assert sim.weights["a"] + sim.weights["b"] <= 10.0 + 1e-9
+
+
+def test_idle_bandwidth_goes_to_tightest_flow_exactly():
+    sim = LinkSim(dgx_v100(), policy="drr")
+    sched = PcieScheduler(sim, bw_all=48.0)
+    sched.admit("tight", size_mb=24.0, slo_ms=10.0, infer_ms=7.0)   # 8 MB/ms
+    sched.admit("loose", size_mb=26.0, slo_ms=107.0, infer_ms=7.0)  # 0.26
+    total = 8.0 + 0.26
+    idle = 48.0 - total
+    assert abs(sim.weights["loose"] - 0.26) < 1e-9
+    assert abs(sim.weights["tight"] - (8.0 + idle)) < 1e-9
+
+
+def test_complete_evicts_weight_and_deficit_state():
+    sim = LinkSim(dgx_v100(), policy="drr")
+    sched = PcieScheduler(sim, bw_all=48.0)
+    sched.admit("f", 24.0, slo_ms=50.0, infer_ms=5.0)
+    sched.admit("g", 24.0, slo_ms=60.0, infer_ms=5.0)
+    sim.submit("f", [(("gpu0", "gpu2"), LINK_BW)], 24.0,
+               on_done=lambda s, tr: sched.complete("f"))
+    sim.run()
+    assert "f" not in sim.weights          # drained -> evicted
+    assert "f" not in sched.flows
+    assert "g" in sim.weights              # still admitted
+
+
+def test_complete_with_transfer_in_flight_defers_eviction():
+    sim = LinkSim(dgx_v100(), policy="drr")
+    sched = PcieScheduler(sim, bw_all=48.0)
+    sched.admit("f", 24.0, slo_ms=50.0, infer_ms=5.0)
+    sim.submit("f", [(("gpu0", "gpu2"), LINK_BW)], 24.0)
+    sched.complete("f")                    # transfer still queued
+    assert "f" in sim.weights              # eviction deferred to drain
+    sim.run()
+    assert "f" not in sim.weights
+
+
+# ------------------------------------------------------- two classes ------
+
+def test_background_gets_residual_split_evenly():
+    sim = LinkSim(dgx_v100(), policy="drr")
+    sched = PcieScheduler(sim, bw_all=48.0)
+    sched.admit("fg", 24.0, slo_ms=10.0, infer_ms=7.0)          # floor 8
+    sched.admit("m1", 64.0, cls=BACKGROUND)
+    sched.admit("m2", 64.0, cls=BACKGROUND)
+    resid = 48.0 - 8.0
+    assert abs(sim.weights["m1"] - resid / 2) < 1e-9
+    assert abs(sim.weights["m2"] - resid / 2) < 1e-9
+    # with background active the idle bonus is NOT stacked on the
+    # tightest foreground flow — the residual belongs to the bg class
+    assert abs(sim.weights["fg"] - 8.0) < 1e-9
+
+
+def test_background_demoted_on_admit_promoted_on_complete():
+    sim = LinkSim(dgx_v100(), policy="drr")
+    sched = PcieScheduler(sim, bw_all=48.0)
+    sched.admit("mig", 64.0, cls=BACKGROUND)
+    assert abs(sim.weights["mig"] - 48.0) < 1e-9   # nothing foreground
+    sched.admit("fg", 24.0, slo_ms=10.0, infer_ms=7.0)
+    assert abs(sim.weights["mig"] - 40.0) < 1e-9   # demoted to residual
+    assert sched.demotions == 1
+    sched.complete("fg")
+    assert abs(sim.weights["mig"] - 48.0) < 1e-9   # promoted back
+    assert sched.promotions == 1
+
+
+def test_background_floor_under_oversubscription():
+    sim = LinkSim(dgx_v100(), policy="drr")
+    sched = PcieScheduler(sim, bw_all=10.0, bg_floor=0.02)
+    sched.admit("a", 100.0, 11.0, 1.0)    # wants 10 = all of bw_all
+    sched.admit("mig", 64.0, cls=BACKGROUND)
+    assert abs(sim.weights["mig"] - 0.02) < 1e-12  # residual 0 -> floor
+    assert sim.weights["mig"] > 0                  # never starved to 0
+
+
+def test_class_priority_on_contended_link():
+    """On one shared link the foreground transfer runs as if alone
+    (modulo one chunk of priority inversion); the background transfer
+    gets exactly the leftovers and still completes."""
+    solo = LinkSim(dgx_v100(), policy="drr")
+    t_solo = solo.submit("fg", [(("gpu0", "gpu2"), LINK_BW)], 48.0)
+    solo.run()
+    base = solo.latency(t_solo)
+
+    sim = LinkSim(dgx_v100(), policy="drr")
+    sched = PcieScheduler(sim, bw_all=48.0)
+    sched.admit("mig", 48.0, cls=BACKGROUND)
+    sched.admit("fg", 48.0, slo_ms=5.0, infer_ms=1.0)
+    t_bg = sim.submit("mig", [(("gpu0", "gpu2"), LINK_BW)], 48.0)
+    t_fg = sim.submit("fg", [(("gpu0", "gpu2"), LINK_BW)], 48.0)
+    sim.run()
+    chunk_ms = sim.chunk_mb / LINK_BW
+    assert sim.latency(t_fg) <= base + chunk_ms + 1e-9
+    # bg paid for fg's whole transfer on top of its own service time
+    assert sim.latency(t_bg) >= base + sim.latency(t_fg) - chunk_ms
+    assert sim.transfers[t_bg].t_done > 0          # but DID complete
+    assert sim.mb_by_class["fg"] == 48.0
+    assert sim.mb_by_class["bg"] == 48.0
+
+
+def test_background_uses_foreground_arrival_gaps():
+    """Work conservation: with no foreground chunks available the link
+    serves background immediately — the residual is physical idle time,
+    not a fixed share."""
+    sim = LinkSim(dgx_v100(), policy="drr")
+    sched = PcieScheduler(sim, bw_all=48.0)
+    sched.admit("mig", 24.0, cls=BACKGROUND)
+    t_bg = sim.submit("mig", [(("gpu0", "gpu2"), LINK_BW)], 24.0)
+    sim.run()
+    assert sim.latency(t_bg) <= 24.0 / LINK_BW + 0.1   # full link speed
+
+
+# ------------------------------------------------------ SLO tracking ------
+
+def test_slo_miss_accounting():
+    sim = LinkSim(dgx_v100(), policy="drr")
+    sched = PcieScheduler(sim, bw_all=48.0)
+    sched.admit("ok", 24.0, slo_ms=10.0, infer_ms=5.0, t=0.0)
+    sched.complete("ok", t=4.0)            # slack 5, took 4 -> fine
+    sched.admit("late", 24.0, slo_ms=10.0, infer_ms=5.0, t=0.0)
+    sched.complete("late", t=7.0)          # slack 5, took 7 -> miss
+    assert sched.fg_tracked == 2
+    assert sched.fg_missed == 1
+    assert sched.slo_misses[0][0] == "late"
+
+
+def test_concurrent_admissions_refcounted_per_func():
+    """A fan-in stage admits the same func once per dep fetch: every
+    admission gets its own miss check (FIFO-paired), the flow keeps
+    counting toward the residual until the LAST completion, and only
+    then is the weight evicted."""
+    sim = LinkSim(dgx_v100(), policy="drr")
+    sched = PcieScheduler(sim, bw_all=48.0)
+    sched.admit("fan", 24.0, slo_ms=8.0, infer_ms=5.0, t=0.0)   # slack 3
+    sched.admit("fan", 24.0, slo_ms=8.0, infer_ms=5.0, t=0.0)
+    sched.admit("mig", 64.0, cls=BACKGROUND)
+    resid_two = sim.weights["mig"]
+    sched.complete("fan", t=1.0)           # in time
+    assert "fan" in sched.flows            # sibling still in flight
+    assert sim.weights["mig"] == resid_two     # residual unchanged
+    sched.complete("fan", t=99.0)          # 96 ms over slack -> miss
+    assert sched.fg_tracked == 2
+    assert sched.fg_missed == 1
+    assert "fan" not in sched.flows
+    assert "fan" not in sim.weights        # evicted on last completion
+    assert not sched._admit_t              # no leaked admission records
+    assert sim.weights["mig"] > resid_two  # promoted after fg drained
+
+
+def test_no_slo_means_no_tracking():
+    sim = LinkSim(dgx_v100(), policy="drr")
+    sched = PcieScheduler(sim, bw_all=48.0)
+    sched.admit("be", 24.0, t=0.0)         # default slo 1e9: untracked
+    sched.complete("be", t=1e6)
+    assert sched.fg_tracked == 0 and sched.fg_missed == 0
+
+
+# ----------------------------------------------- api-level integration ----
+
+def test_spill_and_prefetch_ride_background_class():
+    """Store-facade migration goes through background admission: spill
+    bytes land in mb_by_class["bg"], and the per-transfer migration
+    flows are evicted from the scheduler once they drain."""
+    cfg = dataclasses.replace(FAASTUBE, store_cap_mb=64.0)
+    tube = FaaSTube(dgx_v100(), cfg)
+    tube.store("p1", "d1", 48.0, "gpu0", 0.0, consumer_pos=9)
+    tube.store("p2", "d2", 48.0, "gpu0", 0.0, consumer_pos=1)
+    tube.sim.run()
+    assert tube.sim.mb_by_class["bg"] == 48.0      # the spill
+    assert tube.migrator.bg_submitted_mb == 48.0
+    assert not tube.sched.bg_flows                 # drained -> evicted
+    assert not any(f.startswith("mig") for f in tube.sim.weights)
+
+    # demand reload is foreground: it blocks the consumer's fetch
+    done = []
+    t1 = tube.sim.now
+    tube.fetch("c1", "d1", "gpu0", t1, slo_ms=1e4, infer_ms=1.0,
+               on_ready=lambda s, t: done.append(t))
+    tube.sim.run()
+    assert done and tube.stats["reloads"] == 1
+    # the reload itself is foreground; making room for it evicted the
+    # other resident item — one more 48 MB background spill
+    assert tube.stats["migrations"] == 2
+    assert tube.sim.mb_by_class["bg"] == 96.0
+    assert tube.sim.mb_by_class["fg"] >= 48.0      # reload counted fg
+
+
+def test_unregulated_contrast_arm_bypasses_admission():
+    cfg = dataclasses.replace(FAASTUBE, store_cap_mb=64.0,
+                              bg_migration=False, name="faastube-unreg")
+    tube = FaaSTube(dgx_v100(), cfg)
+    tube.store("p1", "d1", 48.0, "gpu0", 0.0, consumer_pos=9)
+    tube.store("p2", "d2", 48.0, "gpu0", 0.0, consumer_pos=1)
+    tube.sim.run()
+    assert tube.stats["migrations"] == 1
+    assert tube.sim.mb_by_class["bg"] == 0.0       # parity with fg
+    assert not tube.sched.bg_flows

@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import get_arch
 from repro.configs.base import ShapeSpec
-from repro.core.api import FAASTUBE, INFLESS, SYSTEMS
+from repro.core.api import FAASTUBE, SYSTEMS
 from repro.core.topology import dgx_a100, dgx_v100
 from repro.serving.executor import run_closed_loop
 from repro.serving.workflow import WORKFLOWS
