@@ -28,6 +28,7 @@ import sys
 SKIP_KEYS = {
     "wall_s", "wall_clock", "total_wall_s", "events_per_sec",
     "chunk_exact_events_per_sec", "coalesce_speedup_x",
+    "contended_speedup_x",
 }
 
 

@@ -33,35 +33,37 @@ MIX = ("driving", "video", "traffic", "image")
 WALL_BUDGET_S = 60.0
 
 
-def build_fleet(topo):
+def build_fleet(topo, n_nodes: int = N_NODES, n_apps: int = N_APPS):
     """Clone workflows into per-app instances with per-node placements."""
     apps, placements = [], {}
-    cursor = [0] * N_NODES
+    cursor = [0] * n_nodes
     by_node = {n: [g for g in topo.gpus if g.startswith(f"n{n}:")]
-               for n in range(N_NODES)}
-    for k in range(N_APPS):
+               for n in range(n_nodes)}
+    for k in range(n_apps):
         base = WORKFLOWS[MIX[k % len(MIX)]]
         w = dataclasses.replace(base, name=f"{base.name}@{k}")
-        node = k % N_NODES
+        node = k % n_nodes
         gpus = by_node[node]
         gpu_stages = [s for s in w.stages if s.kind == "gpu"]
         pl = {s.name: gpus[(cursor[node] + i) % len(gpus)]
               for i, s in enumerate(gpu_stages)}
         cursor[node] += len(gpu_stages)
         if k % 4 == 3:          # FaasFlow-style spill: one inter-node edge
-            pl[gpu_stages[-1].name] = by_node[(node + 1) % N_NODES][0]
+            pl[gpu_stages[-1].name] = by_node[(node + 1) % n_nodes][0]
         placements[w.name] = pl
         apps.append(w)
     return apps, placements
 
 
-def run_fleet(cfg, seed: int = 0) -> WorkflowEngine:
-    topo = cluster(N_NODES, base=dgx_v100)
-    apps, placements = build_fleet(topo)
+def run_fleet(cfg, seed: int = 0, *, n_nodes: int = N_NODES,
+              n_apps: int = N_APPS,
+              reqs_per_app: int = REQS_PER_APP) -> WorkflowEngine:
+    topo = cluster(n_nodes, base=dgx_v100)
+    apps, placements = build_fleet(topo, n_nodes, n_apps)
     eng = WorkflowEngine(topo, cfg, placements=placements)
     n_sub = 0
     for k, w in enumerate(apps):
-        for t in arrivals("bursty", REQS_PER_APP, 40.0, seed + k):
+        for t in arrivals("bursty", reqs_per_app, 40.0, seed + k):
             eng.submit_workflow(w, t)
             n_sub += 1
     eng.run()

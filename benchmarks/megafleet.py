@@ -1,0 +1,65 @@
+"""Megafleet scenario: 4096 concurrent workflows on a 64-node cluster.
+
+8x the fleet scenario along every axis that matters — 512 app instances
+over 64 dgx-v100 nodes (512 GPUs), 4096 concurrent workflows — to check
+that FaaSTube's reduction over the host-staged baseline survives another
+order of magnitude of scale, the regime the related GPU-serverless
+systems (Torpor, arXiv:2306.03622; fast-setup GPU serverless,
+arXiv:2404.14691) argue about.
+
+This trace is infeasible on the pre-round-coalescing engine: at this
+concurrency most links run contended, and chunk-per-event DRR dispatch
+plus cluster-wide Dijkstra per fetch put it far beyond the wall budget.
+It became runnable when contended links started committing whole
+fair-share rounds per heap event and the pathfinder went hierarchical
+(node-scoped searches, per-node route-cache generations).
+
+Run with ``python -m benchmarks.run megafleet`` (EXTRAS, not in the
+default figure list).  CI runs it as a budgeted smoke; its event counts
+are deterministic and band-gated via BENCH_simperf.json.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import emit, lat_ms, p99
+from benchmarks.fleet import run_fleet
+from repro.core.api import SYSTEMS
+
+N_NODES = 64
+N_APPS = 512         # app instances, round-robin over nodes
+REQS_PER_APP = 8     # 512 x 8 = 4096 concurrent workflows
+#: wall budget in seconds; overridable for operators on slow/shared
+#: boxes (the development container runs this in ~35-55 s depending on
+#: machine phase — the margin is real, so CI keeps the default)
+WALL_BUDGET_S = float(os.environ.get("MEGAFLEET_BUDGET_S", "60"))
+
+
+def main():
+    from repro.core import linksim as L
+    t0 = time.time()
+    lat, events = {}, {}
+    for sname in ("infless+", "faastube"):
+        e0 = L.TOTAL_EVENTS
+        eng = run_fleet(SYSTEMS[sname], n_nodes=N_NODES, n_apps=N_APPS,
+                        reqs_per_app=REQS_PER_APP)
+        lat[sname] = p99([lat_ms(r) for r in eng.completed])
+        events[sname] = L.TOTAL_EVENTS - e0
+        emit("megafleet", f"{sname}.p99", lat[sname], "ms",
+             f"{events[sname]} events")
+    wall = time.time() - t0
+    red = 1 - lat["faastube"] / lat["infless+"]
+    emit("megafleet", "n_workflows", N_APPS * REQS_PER_APP, "req",
+         f"{N_NODES}-node cluster, {N_NODES * 8} GPUs")
+    emit("megafleet", "reduction_vs_infless", 100 * red, "%",
+         "fleet band at 8x scale: ~83%")
+    emit("megafleet", "wall_clock", wall, "s",
+         f"budget: <{WALL_BUDGET_S:.0f}s")
+    assert red >= 0.5, f"megafleet reduction collapsed: {red:.2f}"
+    assert wall < WALL_BUDGET_S, f"megafleet too slow: {wall:.1f}s"
+    return lat
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,7 @@ BENCHES = [
 # fleet`): heavier than the paper figures, gated in CI instead
 EXTRAS = [
     "fleet",        # 512 concurrent workflows on a 16-node cluster
+    "megafleet",    # 4096 concurrent workflows on a 64-node cluster
     "memstress",    # store_cap sweep under bursty memory pressure
     "isoperf",      # fg SLO attainment vs bg migration pressure
 ]

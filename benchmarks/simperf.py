@@ -9,7 +9,12 @@ itself:
   * ``chunk_exact_events_per_sec`` — raw event-loop throughput on a
     contended link with the per-chunk reference engine;
   * ``coalesce_speedup`` — wall-clock ratio of the same scenario under
-    the burst-coalesced engine (the tentpole optimization).
+    the burst-coalesced engine (the PR-1 tentpole optimization);
+  * ``contended_*`` — a K=8 single-link weighted-DRR brawl (staggered
+    arrivals, mixed fg/bg, every chunk contended): the round-coalescing
+    micro.  ``contended_event_reduction_x`` is the chunk-exact/
+    round-coalesced event ratio — the events that fair-share rounds
+    fold into single heap dispatches.
 
 Results land in ``BENCH_simperf.json`` (repo root by default) — uploaded
 as a CI artifact so engine regressions show up as a number, not a vibe.
@@ -42,15 +47,38 @@ def _micro_scenario(coalesce: bool):
     return time.perf_counter() - t0, sim.n_events
 
 
+def _contended_scenario(coalesce: bool):
+    """K=8 functions brawling over ONE link under weighted DRR — every
+    chunk is a contended pick, the regime round coalescing targets."""
+    sim = L.LinkSim(dgx_v100(), policy="drr", coalesce=coalesce)
+    for i in range(8):
+        f = f"f{i}"
+        sim.set_rate_weight(f, 0.25 + 0.5 * (i % 4))
+        if i % 3 == 2:
+            sim.set_func_class(f, "bg")
+        for j in range(4):
+            sim.submit(f, [(("gpu0", "gpu2"), 24.0)], 48.0,
+                       t=i * 0.91 + j * 23.0)
+    t0 = time.perf_counter()
+    sim.run()
+    return time.perf_counter() - t0, sim.n_events
+
+
 def micro() -> dict:
     wall_exact, ev_exact = _micro_scenario(coalesce=False)
     wall_coal, ev_coal = _micro_scenario(coalesce=True)
+    cwall_exact, cev_exact = _contended_scenario(coalesce=False)
+    cwall_coal, cev_coal = _contended_scenario(coalesce=True)
     return {
         "chunk_exact_events_per_sec": round(ev_exact / max(wall_exact, 1e-9)),
         "chunk_exact_events": ev_exact,
         "coalesced_events": ev_coal,
         "event_reduction_x": round(ev_exact / max(ev_coal, 1), 1),
         "coalesce_speedup_x": round(wall_exact / max(wall_coal, 1e-9), 1),
+        "contended_chunk_exact_events": cev_exact,
+        "contended_coalesced_events": cev_coal,
+        "contended_event_reduction_x": round(cev_exact / max(cev_coal, 1), 1),
+        "contended_speedup_x": round(cwall_exact / max(cwall_coal, 1e-9), 1),
     }
 
 

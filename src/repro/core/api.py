@@ -69,6 +69,13 @@ class TubeConfig:
     # at parity with foreground fetches (the pre-arbiter behaviour, kept
     # as the contrast arm for the isolation benchmarks)
     bg_migration: bool = True
+    # aging/quantum guard against background starvation: serve one
+    # background chunk after this many consecutive foreground chunks on
+    # a link where background work sits ready.  0 (default) keeps
+    # strict per-link class priority — background only rides foreground
+    # arrival gaps, so a continuously backlogged foreground trace can
+    # starve migration (the ROADMAP open item this knob closes).
+    bg_guard: int = 0
 
 
 # INFless+ moves data through pageable host memory (shared-memory data
@@ -116,7 +123,8 @@ class FaaSTube:
     def __init__(self, topo: Topology, cfg: TubeConfig = FAASTUBE):
         self.topo = topo
         self.cfg = cfg
-        self.sim = LinkSim(topo, policy="drr" if cfg.slo_sched else "fifo")
+        self.sim = LinkSim(topo, policy="drr" if cfg.slo_sched else "fifo",
+                           bg_every=cfg.bg_guard)
         self.index = DataIndex()
         self.pf = PathFinder(topo, transit="gpu,chip,pcie,host")
         self.pools: dict[str, ElasticPool] = {}

@@ -69,6 +69,28 @@ chunk-exact *semantics* but dispatches at burst granularity:
   when contention arrives later.  `PcieScheduler` weight churn checkpoints
   this replay at the old weight before the new weight applies.
 
+* **Round coalescing (contended links).**  When K functions share a link,
+  the engine no longer dispatches one heap event per DRR chunk-pick.
+  `_serve_round` runs the *real* weighted-DRR pick loop forward in
+  virtual time — including deficit skips, the no-decrement fallback take,
+  starvation (a function whose next chunk has not arrived leaves the ring
+  and rejoins at the tail when it does), class priority, and the
+  background aging guard — and commits the whole fair-share segment as a
+  single `_Round` service: per-function finish schedules, one "done"
+  heap event at the segment end.  A segment ends on a burst exhaustion
+  at its final hop (a potential transfer completion, whose callbacks
+  must fire at that instant) or when nothing further is serveable; it is
+  *truncated at the current chunk boundary* by any mid-segment state
+  change — an arrival on the link, a wake that changes ring membership,
+  a weight change, or a class transition.  Truncation restores the
+  ring/deficit/guard snapshot taken at segment start and deterministically
+  replays the first `keep` picks (the loop is a pure function of static
+  availability schedules), then cascades the cut to downstream hops per
+  member burst.  Because the committed pick sequence IS the chunk-exact
+  pick sequence, per-transfer completion times are byte-identical by
+  construction; `tests/test_linksim_equiv.py` pins this on randomized
+  contended multi-class traces.
+
 * Events are plain tuples `(t, seq, kind, payload)` (no dataclass
   comparison on the heap), link bandwidth is cached per link keyed on
   `Topology.version`, and per-function queue/deficit/weight state is
@@ -91,6 +113,7 @@ from __future__ import annotations
 
 import itertools
 import math
+from bisect import bisect_right
 from collections import deque
 from dataclasses import dataclass
 from heapq import heappop, heappush
@@ -176,6 +199,63 @@ class _Service:
         self.func = burst.func
         self.max_avail = max_avail     # last served chunk's arrival time
         self.end = end
+
+
+class _RPart:
+    """One member burst's share of a round-coalesced segment."""
+    __slots__ = ("burst", "taken0", "count", "fsegs", "downstream", "busy",
+                 "last_f", "dur", "bw")
+
+    def __init__(self, burst, taken0, bw):
+        self.burst = burst
+        self.taken0 = taken0      # burst.taken at segment start
+        self.count = 0            # chunks served in this segment
+        self.fsegs: list[tuple] = []
+        self.downstream = None
+        self.busy = 0.0
+        self.last_f = 0.0         # finish of the part's latest chunk
+        self.bw = bw              # effective link bw for this transfer
+        self.dur = burst.chunk / bw   # regular-chunk service time
+
+
+class _Round:
+    """A round-coalesced fair-share segment on a contended link: the
+    committed weighted-DRR pick sequence between two state-change
+    epochs, delivered as one heap event.
+
+    ``picks_f``/``picks_d`` are the per-pick finish times / service
+    durations (finish - dur == the pick's wire start, also across idle
+    gaps).  ``snap`` is the (fg ring, bg ring, deficits, aging counter)
+    state at segment start — truncation restores it and replays the
+    first `keep` picks deterministically.
+    """
+    __slots__ = ("gen", "link", "start", "end", "picks_f", "picks_d",
+                 "parts", "snap", "busy", "all_fg", "gapless", "horizon",
+                 "wsnap", "bgsnap")
+
+    def __init__(self, gen, link, start, end, picks_f, picks_d, parts,
+                 snap, busy, all_fg, gapless, horizon):
+        self.gen = gen
+        self.link = link
+        self.start = start
+        self.end = end
+        self.picks_f = picks_f
+        self.picks_d = picks_d
+        self.parts = parts
+        self.snap = snap
+        self.busy = busy
+        self.all_fg = all_fg      # every pick is foreground class
+        self.gapless = gapless    # picks are back-to-back from `start`
+        #: last arrival seq visible when the segment was planned — a
+        #: truncation replay must not see bursts that arrived later,
+        #: or it would diverge from the committed prefix
+        self.horizon = horizon
+        #: plan-time weights / bg-class membership of every function
+        #: that could influence the segment (ring members + queued) —
+        #: replays read these, so later weight churn, weight eviction,
+        #: or class flips cannot desynchronize the committed prefix
+        self.wsnap: dict = {}
+        self.bgsnap: set = set()
 
 
 # ---------------------------------------------------------------- segments --
@@ -281,13 +361,20 @@ def _serve_seg(f, t0, iv, cnt, d, out):
 class LinkSim:
     def __init__(self, topo: Topology, *, policy: str = "drr",
                  chunk_mb: float = 2.0, pinned_cached: bool = True,
-                 unpinned_hosts: bool = False, coalesce: bool = True):
+                 unpinned_hosts: bool = False, coalesce: bool = True,
+                 bg_every: int = 0):
         self.topo = topo
         self.policy = policy
         self.chunk_mb = chunk_mb
         self.pinned_cached = pinned_cached
         self.unpinned_hosts = unpinned_hosts
         self.coalesce = coalesce
+        #: aging/quantum guard (DRR only): after `bg_every` consecutive
+        #: foreground chunks served on a link while background work was
+        #: available there, the next pick serves one background chunk —
+        #: a continuously backlogged foreground can no longer starve
+        #: migration.  0 keeps strict per-link class priority.
+        self.bg_every = bg_every
         self.now = 0.0
         self.n_events = 0
         self._seq = itertools.count()
@@ -302,7 +389,20 @@ class LinkSim:
         self._rr: dict[tuple, deque] = {}        # foreground DRR ring
         self._rrb: dict[tuple, deque] = {}       # background DRR ring
         self._cls_bg: set[str] = set()           # funcs in the bg class
+        self._fgrun: dict[tuple, int] = {}       # fg chunks since last bg
         self.mb_by_class = {"fg": 0.0, "bg": 0.0}
+        # round-planning mode: while set, starvation wakes on _plan_link
+        # are captured into _plan_pend instead of the heap (the planner
+        # processes rejoins internally; residual wakes are pushed at
+        # commit time)
+        self._plan_link = None
+        self._plan_pend: list | None = None
+        self._plan_seq = 0
+        self._plan_horizon = None   # replay mode: max burst seq visible
+        self._plan_pmin = _INF      # earliest pending internal rejoin
+        self._plan_w = None         # replay mode: plan-time weights
+        self._plan_bg = None        # replay mode: plan-time bg classes
+        self._arr_hi = -1           # last arrival seq handed out
         self._deficit: dict[tuple, dict[str, float]] = {}
         self._wake: dict[tuple, float] = {}
         self.weights: dict[str, float] = {}
@@ -310,21 +410,45 @@ class LinkSim:
         self._tid = itertools.count()
         self.link_busy_ms: dict[tuple, float] = {}
         self._func_tr: dict[str, int] = {}       # live transfers per func
-        self._func_links: dict[str, set] = {}    # links a func ever queued on
+        # links a func ever queued on — an insertion-ordered dict used
+        # as a set: iteration order must be deterministic (weight-churn
+        # truncations walk it, and their relative order shifts heap
+        # sequence numbers), and set iteration is salted per process
+        self._func_links: dict[str, dict] = {}
         self._pending_clear: set[str] = set()    # clear_func awaiting drain
         self._bw_cache: dict[tuple, tuple] = {}
         self._bw_version = -1
 
     # ------------------------------------------------------------ submit --
+    @staticmethod
+    def _round_involves(svc, func) -> bool:
+        """Whether func participates in a committed round segment.
+        ``wsnap`` holds every ring member and queued function at plan
+        time — the rings/queues themselves evolve eagerly through the
+        whole plan, so they cannot tell mid-segment relevance.  A
+        function outside this set cannot be picked before the segment
+        ends, and truncation replays read the plan-time weight/class
+        snapshots, so a change to it needs no cut."""
+        return func in svc.wsnap
+
     def set_rate_weight(self, func: str, weight: float):
         weight = max(weight, 1e-6)
         old = self.weights.get(func, 1.0)
         if weight != old:
             # checkpoint the deficit replay of any coalesced burst in
-            # flight at the OLD weight before the new one takes effect
+            # flight at the OLD weight before the new one takes effect;
+            # a round-coalesced segment's pick pattern depends on the
+            # weight, so it is cut at the chunk boundary (the replay
+            # inside _trunc_round runs from the plan-time snapshots) and
+            # re-planned by the next dispatch under the new one
             for link in self._func_links.get(func, ()):
                 svc = self._active.get(link)
-                if svc is not None and svc.coalesced and svc.func == func:
+                if svc is None:
+                    continue
+                if type(svc) is _Round:
+                    if self._round_involves(svc, func):
+                        self._trunc_round(svc, self._keep_round(svc))
+                elif svc.coalesced and svc.func == func:
                     picks = self._keep_count(svc)
                     self._replay_deficit(link, func, picks - svc.replayed)
                     svc.replayed = max(svc.replayed, picks)
@@ -336,15 +460,76 @@ class LinkSim:
         ring per link that is only served when no foreground chunk is
         available there.  Class membership follows the set_rate_weight
         contract: it outlives individual transfers and is evicted by
-        clear_func."""
-        if cls == "bg":
+        clear_func.
+
+        A MID-FLIGHT transition (the function still has bursts queued)
+        is a segment boundary for round-coalesced service, and the
+        function's queued ring membership moves to its new class ring —
+        re-entering at the tail like a fresh arrival, identically in
+        both engines (the chunk-exact reference runs this same code)."""
+        new_bg = cls == "bg"
+        if new_bg == (func in self._cls_bg):
+            return
+        old_rings = self._rrb if func in self._cls_bg else self._rr
+        new_rings = self._rrb if new_bg else self._rr
+        for link in self._func_links.get(func, ()):
+            svc = self._active.get(link)
+            if type(svc) is _Round and (
+                    self._round_involves(svc, func)
+                    or self._queues.get(link, {}).get(func)):
+                # the second clause catches a function that arrived
+                # AFTER the segment was planned (a background arrival
+                # against an all-fg gapless round does not truncate):
+                # its transition changes which class ring its queued
+                # chunks contend from, so the segment must end here
+                self._trunc_round(svc, self._keep_round(svc))
+            elif (self.policy == "drr" and svc is not None
+                    and type(svc) is not _Round
+                    and svc.coalesced and svc.count > 1):
+                if func != svc.func:
+                    if self._queues.get(link, {}).get(func):
+                        # a queued function switching class against a
+                        # solo coalesced burst mirrors _enqueue's
+                        # arrival rule: a promotion to foreground
+                        # preempts at the next chunk boundary exactly as
+                        # a fresh fg arrival would, while a demotion to
+                        # background (vs a foreground burst, guard off)
+                        # keeps waiting
+                        arrived = svc.max_avail <= self.now + 1e-12
+                        if not (arrived and new_bg
+                                and svc.func not in self._cls_bg
+                                and not self.bg_every):
+                            self._truncate(svc, self._keep_count(svc))
+                else:
+                    q = self._queues.get(link)
+                    if q and any(g != func and dq for g, dq in q.items()):
+                        # the RUNNING function's own class changed with
+                        # other work queued: its remaining chunks now
+                        # contend under a different priority, so the
+                        # burst ends at the boundary and per-pick
+                        # arbitration takes over
+                        self._truncate(svc, self._keep_count(svc))
+            rr = old_rings.get(link)
+            if rr is not None and func in rr:
+                rr.remove(func)
+                if self._queues.get(link, {}).get(func):
+                    nr = new_rings.get(link)
+                    if nr is None:
+                        nr = new_rings[link] = deque()
+                    if func not in nr:
+                        nr.append(func)
+        if new_bg:
             self._cls_bg.add(func)
         else:
             self._cls_bg.discard(func)
 
     def _ring(self, link, func, create: bool = False):
-        """The DRR ring (fg or bg) func belongs to on this link."""
-        rings = self._rrb if func in self._cls_bg else self._rr
+        """The DRR ring (fg or bg) func belongs to on this link.  In
+        replay mode the plan-time class membership decides, so a class
+        flip after the segment was committed cannot re-route a replayed
+        rejoin."""
+        bg = self._plan_bg if self._plan_bg is not None else self._cls_bg
+        rings = self._rrb if func in bg else self._rr
         rr = rings.get(link)
         if rr is None and create:
             rr = rings[link] = deque()
@@ -374,6 +559,22 @@ class LinkSim:
             dd = self._deficit.get(link)
             if dd is not None:
                 dd.pop(func, None)
+            # purge stale DRR ring membership: a drained function has no
+            # queued bursts anywhere, so a lingering ring entry is pure
+            # re-scan overhead that accumulates across long traces
+            for rings in (self._rr, self._rrb):
+                rr = rings.get(link)
+                if rr is not None and func in rr:
+                    rr.remove(func)
+                if rr is not None and not rr:
+                    del rings[link]
+            q = self._queues.get(link)
+            if q is not None:
+                dq = q.get(func)
+                if dq is not None and not dq:
+                    del q[func]
+                if not q:
+                    del self._queues[link]
 
     def call_at(self, t: float, fn):
         """Schedule an arbitrary callback(sim) at time t."""
@@ -470,7 +671,25 @@ class LinkSim:
         """Re-check a link at time t — for `func`, this re-enacts the
         chunk-exact engine's rr rejoin: a starved function leaves the
         round-robin ring and re-enters at the TAIL when its next chunk
-        arrives, which is exactly this wake's fire time."""
+        arrives, which is exactly this wake's fire time.
+
+        While a round segment is being planned on `link`, the wake is
+        captured into the plan's pending-rejoin list instead: the
+        planner processes rejoins internally and only pushes real wakes
+        for entries still pending at commit."""
+        if t == _INF:
+            # a queue whose remaining entries are all exhausted has no
+            # future availability: there is nothing to wake for, and an
+            # infinity-timestamped event would drag sim.now to infinity
+            # when the heap finally drains
+            return
+        if self._plan_pend is not None and link == self._plan_link \
+                and func is not None:
+            self._plan_seq += 1
+            self._plan_pend.append((t, self._plan_seq, func))
+            if t < self._plan_pmin:
+                self._plan_pmin = t
+            return
         key = (link, func)
         cur = self._wake.get(key)
         if cur is not None and cur <= t + 1e-12:
@@ -486,6 +705,17 @@ class LinkSim:
             if dq:
                 b, fut = self._avail_front(dq, self.now)
                 if b is not None:
+                    # a ring-membership change is a segment boundary for
+                    # an active round: cut it at the chunk boundary
+                    # BEFORE the rejoin, so the restored+replayed ring is
+                    # the one the newcomer appends to
+                    svc = self._active.get(link)
+                    need_cut = type(svc) is _Round
+                    if need_cut:
+                        rr = self._ring(link, func)
+                        need_cut = rr is None or func not in rr
+                    if need_cut:
+                        self._trunc_round(svc, self._keep_round(svc))
                     rr = self._ring(link, func, create=True)
                     if func not in rr:
                         rr.append(func)       # rejoin at the tail
@@ -504,7 +734,7 @@ class LinkSim:
             # (arrival events fire exactly at the first chunk's
             # availability, so no wake is needed; a later preemption
             # re-registers the remainder through _truncate.)
-            self._func_links.setdefault(b.func, set()).add(link)
+            self._func_links.setdefault(b.func, {})[link] = None
             if self.policy == "fifo":
                 fifo = self._fifo.get(link)
                 if fifo is None:
@@ -518,7 +748,21 @@ class LinkSim:
         if dq is None:
             dq = q[b.func] = deque()
         dq.append(b)
-        self._func_links.setdefault(b.func, set()).add(link)
+        self._func_links.setdefault(b.func, {})[link] = None
+        svc = self._active.get(link)
+        if type(svc) is _Round:
+            # an arrival is a segment boundary for round-coalesced
+            # service — cut at the chunk boundary BEFORE the ring append
+            # below, so the newcomer lands at the tail of the
+            # restored+replayed ring (chunk-exact arrival order).  The
+            # one exception mirrors the class rule: a background arrival
+            # cannot obtain service before a gapless all-foreground
+            # segment ends (strict priority, no idle to fill), so that
+            # segment stands — unless the aging guard owes background a
+            # slot.
+            if not (b.func in self._cls_bg and svc.all_fg and svc.gapless
+                    and not self.bg_every):
+                self._trunc_round(svc, self._keep_round(svc))
         if self.policy == "fifo":
             f = self._fifo.get(link)
             if f is None:
@@ -535,6 +779,8 @@ class LinkSim:
         svc = self._active.get(link)
         if svc is None:
             self._dispatch(link)
+        elif type(svc) is _Round:
+            return
         elif svc.coalesced and svc.count > 1:
             # A new entry arrived mid-burst: preemption point is the next
             # chunk boundary.  A burst whose remaining chunks all already
@@ -549,20 +795,40 @@ class LinkSim:
             arrived = svc.max_avail <= self.now + 1e-12
             if arrived and (self.policy == "fifo" or b.func == svc.func
                             or (b.func in self._cls_bg
-                                and svc.func not in self._cls_bg)):
+                                and svc.func not in self._cls_bg
+                                and not self.bg_every)):
                 return
             self._truncate(svc, self._keep_count(svc))
 
     def _avail_front(self, dq, now):
         """Oldest available (arrival-time, seq) burst of one function's
-        queue, plus the earliest future availability if none is ready."""
+        queue, plus the earliest future availability if none is ready.
+
+        In replay mode (`_plan_horizon` set) bursts that arrived after
+        the segment being replayed was planned are invisible — the
+        committed prefix was chosen without them."""
         while dq and dq[0].taken >= dq[0].n:
             dq.popleft()
+        hz = self._plan_horizon
+        if len(dq) == 1:
+            # the overwhelmingly common shape: one live burst per func
+            b = dq[0]
+            if hz is not None and b.seq > hz:
+                return None, _INF
+            i = b.taken
+            for t0, iv, cnt in b.avail:
+                if i < cnt:
+                    a = t0 + iv * i
+                    break
+                i -= cnt
+            if a <= now + 1e-12:
+                return b, _INF
+            return None, a
         best = None
         bk = None
         fut = _INF
         for b in dq:
-            if b.taken >= b.n:
+            if b.taken >= b.n or (hz is not None and b.seq > hz):
                 continue
             a = _seg_at(b.avail, b.taken)
             if a <= now + 1e-12:
@@ -574,20 +840,50 @@ class LinkSim:
         return best, fut
 
     # ------------------------------------------------------------- picks --
-    def _pick_drr(self, link):
+    def _pick_drr(self, link, now):
         """Class-priority DRR pick: serve the foreground ring; only when
         it yields no available chunk may the background ring send one
         (strict priority at chunk granularity — the background class
-        gets exactly the link's residual capacity)."""
-        f, b = self._pick_ring(link, self._rr.get(link))
-        if b is None and self._rrb:
-            f, b = self._pick_ring(link, self._rrb.get(link))
+        gets exactly the link's residual capacity).
+
+        With the aging guard enabled (`bg_every` > 0), a run of
+        `bg_every` foreground chunks served while background work sat
+        ready on the link forces the next pick to come from the
+        background ring — one quantum, then the counter resets."""
+        n = self.bg_every
+        rrb = self._rrb.get(link) if (n or self._rrb) else None
+        if n and rrb and self._fgrun.get(link, 0) >= n:
+            f, b = self._pick_ring(link, rrb, now)
+            if b is not None:
+                self._fgrun[link] = 0
+                return f, b
+        f, b = self._pick_ring(link, self._rr.get(link), now)
+        if b is None:
+            if rrb is not None:
+                f, b = self._pick_ring(link, rrb, now)
+                if b is not None and n:
+                    self._fgrun[link] = 0     # bg served in an fg gap
+        elif n and rrb and self._bg_ready(link, rrb, now):
+            self._fgrun[link] = self._fgrun.get(link, 0) + 1
         return f, b
 
-    def _pick_ring(self, link, rr):
+    def _bg_ready(self, link, rrb, now):
+        """Any background chunk available on this link right now?"""
+        q = self._queues.get(link)
+        if not q:
+            return False
+        for f in rrb:
+            dq = q.get(f)
+            if dq:
+                b, _fut = self._avail_front(dq, now)
+                if b is not None:
+                    return True
+        return False
+
+    def _pick_ring(self, link, rr, now):
         """Port of the chunk-exact DRR pick over one ring's burst-front
         chunks."""
-        now = self.now
+        weights = self._plan_w if self._plan_w is not None else self.weights
         q = self._queues[link]
         if not rr:
             return None, None
@@ -613,7 +909,7 @@ class LinkSim:
                 rr.popleft()
                 self._wake_push(link, fut, f)
                 continue
-            d = dd.get(f, 0.0) + self.weights.get(f, 1.0) * chunk
+            d = dd.get(f, 0.0) + weights.get(f, 1.0) * chunk
             if d >= chunk:
                 dd[f] = d - chunk
                 rr.rotate(-1)
@@ -686,6 +982,9 @@ class LinkSim:
             b, fut = self._avail_front(dq, now)
             if not dq:
                 del q[f]
+                rr = self._ring(link, f)
+                if rr is not None and f in rr:
+                    rr.remove(f)
                 return
             if b is None:
                 self._wake_push(link, fut)
@@ -721,12 +1020,20 @@ class LinkSim:
                     self._serve_burst(link, b, m)
                     return
         else:
-            f, b = self._pick_drr(link)
+            if self.coalesce:
+                self._serve_round(link)
+                return
+            f, b = self._pick_drr(link, now)
             if b is None:
                 return
         self._serve_burst(link, b, 1, picked=True)
 
     def _serve_burst(self, link, b, count, picked=False):
+        if self.bg_every and b.func in self._cls_bg:
+            # any background service resets the aging guard's run
+            # counter, exactly as the pick-level reset does — a solo
+            # coalesced bg burst has no picks to do it
+            self._fgrun[link] = 0
         tr = self.transfers[b.tid]
         bw = self._eff_bw(link, tr)
         dur = b.chunk / bw
@@ -767,6 +1074,15 @@ class LinkSim:
                 dq.popleft()
             if not dq:
                 del q[b.func]
+                # eager ring eviction at drain: the chunk-exact pick pops
+                # an empty-queue function as a no-op visit, but a
+                # coalesced solo phase has no picks — without this, a
+                # drained function's stale ring entry survives into the
+                # next contention epoch and re-arrivals keep a position
+                # the reference engine would have recycled
+                rr = self._ring(link, b.func)
+                if rr is not None and b.func in rr:
+                    rr.remove(b.func)
         self.link_busy_ms[link] = self.link_busy_ms.get(link, 0.0) + busy
         gen = self._gen.get(link, 0) + 1
         self._gen[link] = gen
@@ -784,6 +1100,337 @@ class LinkSim:
                        max_avail=max_avail, end=f)
         self._active[link] = svc
         heappush(self._events, (f, next(self._seq), "done", (link, gen)))
+
+    # ------------------------------------------------- round coalescing --
+    def _plan_round(self, link, t0, max_picks=None):
+        """Run the weighted-DRR pick loop forward from ``t0`` in virtual
+        time, mutating ring/deficit/guard/burst state eagerly and
+        recording the committed pick sequence.
+
+        The loop IS the chunk-exact engine's per-link arbitration —
+        deficit skips, the no-decrement fallback take, starvation (leave
+        the ring, rejoin at the tail on arrival), class priority, and
+        the aging guard — evaluated at each chunk boundary, so the
+        committed sequence is byte-identical to chunk-per-event
+        dispatch.  Starvation wakes raised inside the window are
+        captured (not heap-pushed): rejoins due before the next boundary
+        are processed in (time, push-order) sequence exactly as the
+        chunk-exact wake events would fire; the remainder is returned to
+        the caller to push as real wakes.
+
+        Stops at a burst exhaustion on its final hop (a potential
+        transfer completion, whose callbacks must fire at that instant),
+        at ``max_picks`` (the truncation replay), or when nothing
+        further is serveable.  Returns
+        ``(picks_f, picks_d, parts, pend, busy, all_fg, gapless)``.
+        """
+        pend: list[tuple] = []
+        self._plan_link = link
+        self._plan_pend = pend
+        picks_f: list[float] = []
+        picks_d: list[float] = []
+        parts: dict[int, _RPart] = {}
+        order: list[_RPart] = []
+        busy = 0.0
+        all_fg = True
+        gapless = True
+        t = t0
+        cls_bg = self._plan_bg if self._plan_bg is not None else self._cls_bg
+        transfers = self.transfers
+        self._plan_pmin = _INF
+        try:
+            while True:
+                if pend and self._plan_pmin <= t + 1e-12:
+                    due = sorted(e for e in pend if e[0] <= t + 1e-12)
+                    if due:
+                        q = self._queues.get(link, {})
+                        for e in due:
+                            pend.remove(e)
+                            fut, _s, f = e
+                            dq = q.get(f)
+                            if not dq:
+                                continue
+                            # chunk-exact _wake_fire logic, evaluated at
+                            # the wake's own fire time
+                            b2, fut2 = self._avail_front(dq, fut)
+                            if b2 is not None:
+                                rr = self._ring(link, f, create=True)
+                                if f not in rr:
+                                    rr.append(f)
+                            elif fut2 < _INF:
+                                self._wake_push(link, fut2, f)  # captured
+                        self._plan_pmin = min(
+                            (e[0] for e in pend), default=_INF)
+                        continue
+                f, b = self._pick_drr(link, t)
+                if b is None:
+                    if picks_f and pend:
+                        nxt = self._plan_pmin
+                        if nxt > t:
+                            # idle until the next internal rejoin — the
+                            # chunk-exact engine's wake-then-dispatch gap
+                            t = nxt
+                            gapless = False
+                        continue
+                    break
+                part = parts.get(id(b))
+                if part is None:
+                    part = parts[id(b)] = _RPart(
+                        b, b.taken, self._eff_bw(link, transfers[b.tid]))
+                    order.append(part)
+                dur = part.dur if b.taken < b.n - 1 else b.last / part.bw
+                fend = t + dur
+                b.taken += 1
+                part.count += 1
+                part.busy += dur
+                fs = part.fsegs
+                if fs:
+                    lt0, liv, lc = fs[-1]
+                    iv = fend - part.last_f
+                    if lc == 1:
+                        fs[-1] = (lt0, iv, 2)
+                    elif abs(liv - iv) <= 1e-9:
+                        fs[-1] = (lt0, liv, lc + 1)
+                    else:
+                        fs.append((fend, 0.0, 1))
+                else:
+                    fs.append((fend, 0.0, 1))
+                part.last_f = fend
+                picks_f.append(fend)
+                picks_d.append(dur)
+                busy += dur
+                if f in cls_bg:
+                    all_fg = False
+                t = fend
+                if b.taken >= b.n:
+                    # burst exhausted: run _serve_burst's eager drain
+                    # cleanup so a fully-drained function leaves its
+                    # ring here exactly as it would chunk-by-chunk
+                    q2 = self._queues.get(link)
+                    dq2 = q2.get(f) if q2 else None
+                    if dq2 is not None:
+                        while dq2 and dq2[0].taken >= dq2[0].n:
+                            dq2.popleft()
+                        if not dq2:
+                            del q2[f]
+                            rr2 = self._ring(link, f)
+                            if rr2 is not None and f in rr2:
+                                rr2.remove(f)
+                if max_picks is not None and len(picks_f) >= max_picks:
+                    break
+                if b.taken >= b.n and b.hop + 2 >= len(b.path):
+                    break       # potential transfer completion at fend
+        finally:
+            self._plan_link = None
+            self._plan_pend = None
+        return picks_f, picks_d, order, pend, busy, all_fg, gapless
+
+    def _serve_round(self, link):
+        """Contended-DRR dispatch: commit one closed-form fair-share
+        segment — whole weighted rounds between state-change epochs — as
+        a single heap event instead of one event per chunk-pick."""
+        now = self.now
+        rr = self._rr.get(link)
+        rrb = self._rrb.get(link)
+        dd = self._deficit.get(link)
+        snap = (tuple(rr) if rr else (),
+                tuple(rrb) if rrb else (),
+                dict(dd) if dd else {},
+                self._fgrun.get(link, 0))
+        # plan-time weight/class view for every func that could
+        # influence the segment (ring members + anything queued, which
+        # covers starved-out rejoiners): replays read these instead of
+        # the live tables, which weight churn, clear_func eviction, or
+        # class flips may mutate while the segment is active.  Built
+        # BEFORE planning — the plan loop evicts drained entries.
+        involved = set(snap[0]) | set(snap[1])
+        q0 = self._queues.get(link)
+        if q0:
+            involved.update(q0)
+        wget = self.weights.get
+        wsnap = {f: wget(f, 1.0) for f in involved}
+        bgsnap = involved & self._cls_bg
+        picks_f, picks_d, order, pend, busy, all_fg, gapless = \
+            self._plan_round(link, now)
+        if not picks_f:
+            for fut, _s, f in pend:
+                self._wake_push(link, fut, f)
+            return
+        gen = self._gen.get(link, 0) + 1
+        self._gen[link] = gen
+        end = picks_f[-1]
+        events = self._events
+        for part in order:
+            b = part.burst
+            if b.hop + 2 < len(b.path):
+                d = _Burst(b.tid, b.func, b.path, b.hop + 1, part.count,
+                           b.chunk, b.last if b.taken == b.n else b.chunk,
+                           list(part.fsegs))
+                part.downstream = d
+                heappush(events,
+                         (part.fsegs[0][0], next(self._seq), "arrive", d))
+        self.link_busy_ms[link] = self.link_busy_ms.get(link, 0.0) + busy
+        svc = _Round(gen, link, now, end, picks_f, picks_d, order, snap,
+                     busy, all_fg, gapless, self._arr_hi)
+        svc.wsnap = wsnap
+        svc.bgsnap = bgsnap
+        self._active[link] = svc
+        heappush(events, (end, next(self._seq), "done", (link, gen)))
+        for fut, _s, f in pend:
+            self._wake_push(link, fut, f)
+
+    def _keep_round(self, svc) -> int:
+        """Picks of a round segment already committed at self.now: every
+        finished pick plus the one physically on the wire (its start is
+        finish - dur, valid across idle gaps)."""
+        now = self.now
+        pf = svc.picks_f
+        done = bisect_right(pf, now + 1e-12)
+        if done >= len(pf):
+            return len(pf)
+        if pf[done] - svc.picks_d[done] <= now + 1e-12:
+            done += 1
+        return done
+
+    def _trunc_round(self, svc, keep):
+        """Cut a round segment back to its first `keep` picks: restore
+        the ring/deficit/guard snapshot and the member bursts to segment
+        start, deterministically replay the kept prefix (the pick loop
+        is a pure function of static availability schedules), and
+        cascade the cut to downstream hops per member burst."""
+        count = len(svc.picks_f)
+        if keep >= count:
+            return
+        if keep < 0:
+            keep = 0
+        link = svc.link
+        gen = self._gen[link] + 1
+        self._gen[link] = gen
+        svc.gen = gen
+        # restore scheduling state to segment start.  Functions that
+        # joined a ring AFTER the snapshot without truncating (the only
+        # such path: background arrivals against an all-foreground
+        # gapless segment, which cannot obtain service before it ends)
+        # must keep their tail position in arrival order — the replayed
+        # window never visits the background ring of an all-fg segment,
+        # so snapshot + late joiners at the tail is the chunk-exact ring.
+        rrt, rrbt, dd0, fgrun0 = svc.snap
+        cur = self._rr.get(link)
+        ex_rr = [f for f in cur if f not in rrt] if cur else []
+        cur = self._rrb.get(link)
+        ex_rrb = [f for f in cur if f not in rrbt] if cur else []
+        if rrt or link in self._rr:
+            self._rr[link] = deque(rrt)
+        if rrbt or link in self._rrb:
+            self._rrb[link] = deque(rrbt)
+        if dd0 or link in self._deficit:
+            self._deficit[link] = dict(dd0)
+        self._fgrun[link] = fgrun0
+        # restore member bursts and their queue entries (in arrival
+        # order; entries that arrived after segment start are already
+        # queued and keep their seq position)
+        q = self._queues.get(link)
+        if q is None:
+            q = self._queues[link] = {}
+        funcs: dict[str, list] = {}
+        for part in svc.parts:
+            part.burst.taken = part.taken0
+            funcs.setdefault(part.burst.func, []).append(part.burst)
+        for f, bursts in funcs.items():
+            dq = q.get(f)
+            have = set(map(id, dq)) if dq else set()
+            add = [b for b in bursts if id(b) not in have and b.taken < b.n]
+            if not add:
+                continue
+            merged = list(dq or ()) + add
+            merged.sort(key=lambda b: b.seq)
+            q[f] = deque(merged)
+        self.link_busy_ms[link] -= svc.busy
+        old_parts = svc.parts
+        if keep == 0:
+            svc.parts = []
+            svc.picks_f = []
+            svc.picks_d = []
+            svc.busy = 0.0
+            if self._active.get(link) is svc:
+                del self._active[link]    # stale done event finds no svc
+            kept: dict[int, int] = {}
+        else:
+            self._plan_horizon = svc.horizon
+            self._plan_w = svc.wsnap
+            self._plan_bg = svc.bgsnap
+            try:
+                picks_f, picks_d, order, pend, busy, all_fg, gapless = \
+                    self._plan_round(link, svc.start, max_picks=keep)
+            finally:
+                self._plan_horizon = None
+                self._plan_w = None
+                self._plan_bg = None
+            self.link_busy_ms[link] += busy
+            svc.parts = order
+            svc.picks_f = picks_f
+            svc.picks_d = picks_d
+            svc.busy = busy
+            svc.all_fg = all_fg
+            svc.gapless = gapless
+            svc.end = picks_f[-1]
+            heappush(self._events,
+                     (svc.end, next(self._seq), "done", (link, gen)))
+            for fut, _s, f in pend:
+                self._wake_push(link, fut, f)
+            kept = {id(p.burst): p for p in order}
+        # re-append post-snapshot joiners at their ring's tail
+        for rings, extras in ((self._rr, ex_rr), (self._rrb, ex_rrb)):
+            if not extras:
+                continue
+            rr2 = rings.get(link)
+            if rr2 is None:
+                rr2 = rings[link] = deque()
+            for f in extras:
+                if f not in rr2:
+                    rr2.append(f)
+        # cascade the cut to downstream hops per member burst
+        for part in old_parts:
+            d = part.downstream
+            if d is None:
+                continue
+            np = kept.get(id(part.burst))
+            k = np.count if np is not None else 0
+            self._trim_downstream(d, k)
+            if np is not None:
+                np.downstream = d      # future cuts cascade again
+        if keep == 0:
+            self._dispatch(link)
+
+    def _trim_downstream(self, d, keep):
+        """Trim a downstream burst to its first `keep` chunks and
+        cascade into whatever service is consuming it."""
+        if d.n <= keep:
+            return
+        d.n = keep
+        d.last = d.chunk
+        d.avail, _ = _seg_prefix(d.avail, keep)
+        dlink = (d.path[d.hop], d.path[d.hop + 1])
+        dsvc = self._active.get(dlink)
+        if type(dsvc) is _Round:
+            for p in dsvc.parts:
+                if p.burst is d:
+                    if p.taken0 + p.count > keep:
+                        # committed-by-now picks only ever use chunks the
+                        # upstream hop has already delivered, so the
+                        # time-boundary cut never loses a valid pick
+                        self._trunc_round(dsvc, self._keep_round(dsvc))
+                    break
+        elif dsvc is not None and dsvc.burst is d \
+                and dsvc.start + dsvc.count > keep:
+            self._truncate(dsvc, keep - dsvc.start)
+        if d.taken >= d.n:
+            # the trim consumed everything still queued downstream
+            dq2 = self._queues.get(dlink, {}).get(d.func)
+            if dq2 is not None and d in dq2:
+                dq2.remove(d)
+                if not dq2:
+                    del self._queues[dlink][d.func]
 
     def _keep_count(self, svc) -> int:
         """Chunks of an in-flight burst already committed at self.now:
@@ -812,6 +1459,11 @@ class LinkSim:
         self.link_busy_ms[link] += new_busy - svc.busy
         svc.busy = new_busy
         svc.count = keep
+        # the cut always drops the tail, so the service can no longer
+        # include the burst's final (remainder-sized) chunk: a later
+        # _keep_count must measure the on-wire chunk at the regular
+        # duration, not the stale dur_last
+        svc.dur_last = svc.dur
         gen = self._gen[link] + 1
         self._gen[link] = gen
         svc.gen = gen
@@ -851,48 +1503,39 @@ class LinkSim:
                         self._wake_push(link, a, b.func)
         # the _fifo deque still holds b at its original position
         d = svc.downstream
-        if d is not None and d.n > keep:
-            d.n = keep
-            d.last = d.chunk
-            d.avail, _ = _seg_prefix(d.avail, keep)
-            dlink = (d.path[d.hop], d.path[d.hop + 1])
-            dsvc = self._active.get(dlink)
-            if dsvc is not None and dsvc.burst is d \
-                    and dsvc.start + dsvc.count > keep:
-                self._truncate(dsvc, keep - dsvc.start)
-            elif d.taken >= d.n:
-                # the trim consumed everything still queued downstream
-                dq2 = self._queues.get(dlink, {}).get(d.func)
-                if dq2 is not None and d in dq2:
-                    dq2.remove(d)
-                    if not dq2:
-                        del self._queues[dlink][d.func]
+        if d is not None:
+            self._trim_downstream(d, keep)
         if keep == 0:
             self._dispatch(link)      # link freed mid-gap: serve the queue
 
     def _replay_deficit(self, link, func, k):
-        """Fold k solo-burst DRR picks into the deficit counter in closed
-        form — per pick: d += w*c; if d >= c: d -= c (the chunk-exact
-        engine's arithmetic, including the no-decrement fallback take)."""
+        """Fold k solo-burst DRR picks into the deficit counter — per
+        pick: d += w*c; if d >= c: d -= c (the chunk-exact engine's
+        arithmetic, including the no-decrement fallback take).
+
+        The replay iterates the per-pick update rather than using the
+        algebraic closed form: the counter must be BIT-identical to
+        chunk-by-chunk accumulation, because a later contended pick
+        compares it against the chunk quantum with `>=` — a last-ulp
+        difference from `k * (wc - c)`-style algebra is enough to flip a
+        crossing that lands exactly on the quantum and desynchronize the
+        two engines.  One float op per chunk is noise next to the event
+        machinery this replay replaces."""
         if k <= 0 or self.policy != "drr":
             return
         c = self.chunk_mb
         w = self.weights.get(func, 1.0)
-        if w == 1.0:
-            return                    # d += c; d -= c — a no-op per pick
         dd = self._deficit.get(link)
         if dd is None:
             dd = self._deficit[link] = {}
         d = dd.get(func, 0.0)
         wc = w * c
-        if wc >= c:
-            d += k * (wc - c)
-        else:
-            while k and d >= c:       # drain leftover credit one pick at a
-                d += wc - c           # time (only after weight shrinks)
-                k -= 1
-            if k:
-                d = (d + k * wc) % c
+        if d == 0.0 and wc == c:
+            return                    # 0 + c; -c — exactly 0 every pick
+        for _ in range(k):
+            d += wc
+            if d >= c:
+                d -= c
         dd[func] = d
 
     def _complete_service(self, t, link, gen):
@@ -900,6 +1543,20 @@ class LinkSim:
         if svc is None or svc.gen != gen:
             return                    # invalidated by truncation
         del self._active[link]
+        if type(svc) is _Round:
+            # ring/deficit/guard state was committed eagerly by the
+            # planner; only transfer progress is credited here.  By
+            # construction at most one member completes its transfer,
+            # and it does so at the segment's end — this instant.
+            for part in svc.parts:
+                b = part.burst
+                if b.hop + 2 >= len(b.path):
+                    tr = self.transfers[b.tid]
+                    tr.chunks_done += part.count
+                    if tr.chunks_done >= tr.n_chunks:
+                        self._finish_transfer(tr)
+            self._dispatch(link)
+            return
         if svc.coalesced:
             self._replay_deficit(link, svc.func, svc.count - svc.replayed)
         b = svc.burst
@@ -940,7 +1597,7 @@ class LinkSim:
         if kind == "done":
             self._complete_service(t, payload[0], payload[1])
         elif kind == "arrive":
-            payload.seq = next(self._arr_seq)
+            payload.seq = self._arr_hi = next(self._arr_seq)
             link = (payload.path[payload.hop], payload.path[payload.hop + 1])
             self._enqueue(link, payload)
         elif kind == "wake":

@@ -28,6 +28,27 @@ dict hit instead of a Dijkstra run:
 
 Queries with ``avoid_edges`` (the rebalancer's what-if probes) bypass the
 cache entirely.
+
+Cluster scaling
+---------------
+On multi-node cluster topologies (`cluster()` — node-qualified names
+like ``n3:gpu0``, inter-node edges ONLY between per-node hosts) the
+search is hierarchical, which is what makes fleet-scale traces feasible:
+
+  * an intra-node query explores only that node's subgraph — a path
+    between two ``nK:`` devices can never leave the node, because the
+    node's single gateway is its host and re-entering would revisit it;
+  * a cross-node query composes ``src -> nS:host``, the direct
+    ``nS:host -> nD:host`` mesh edge (the host mesh is a clique, so any
+    minimal-hop path crosses exactly once), and ``nD:host -> dst`` —
+    two node-local searches instead of a cluster-wide one.  When the
+    composition fails (mesh edge saturated or removed) the query falls
+    back to the cluster-wide Dijkstra, which can still route around via
+    other hosts;
+  * the residual generation is tracked PER NODE: an allocation on node
+    3 no longer invalidates node 5's cached routes, and the pristine
+    `select_paths` memo replays whenever the involved node — not the
+    whole cluster — has no live allocations.
 """
 from __future__ import annotations
 
@@ -51,17 +72,30 @@ class PathFinder:
         self.topo = topo
         self.transit = transit
         self.residual: dict[tuple[str, str], float] = dict(topo.edges)
-        self.users: dict[tuple[str, str], set[str]] = defaultdict(set)
+        # per-edge user "sets" are insertion-ordered dicts: the
+        # rebalancer iterates them, and salted set order would make
+        # path selection (and with it every banded event count)
+        # nondeterministic across processes
+        self.users: dict[tuple[str, str], dict[str, None]] = \
+            defaultdict(dict)
         self.allocs: dict[str, list[PathAlloc]] = defaultdict(list)
         self._gen = 0                 # residual-matrix generation
         self._n_live = 0              # live PathAllocs (0 == pristine graph)
+        # per-node-scope residual generation / live-alloc count ("" is
+        # the scope of unqualified names, e.g. single-server graphs)
+        self._gen_s: dict[str, int] = {}
+        self._n_live_s: dict[str, int] = {}
         self._res_cache: dict = {}    # (src,dst,free_only) -> (gen, tv, p, bw)
         self._topo_cache: dict = {}   # (src,dst) -> (topo_version, path, bw)
         self._sp_cache: dict = {}     # pristine-graph select_paths results
         self._transit_ok: dict = {}   # node -> allowed as intermediate hop
         self._transit_prefixes = tuple(self.transit.split(","))
-        self._adj_cache: dict = {}    # node -> transit-allowed neighbors
+        self._adj_cache: dict = {}    # (node, scope) -> transit neighbors
         self._adj_version = -1
+        #: True once fail_link has performed surgery — only then can a
+        #: node subgraph be disconnected and a scoped miss need the
+        #: cluster-wide re-check
+        self._failed_links = False
 
     # ------------------------------------------------------------- util ---
     def _edge_ok(self, a, b, *, free_only: bool,
@@ -84,6 +118,29 @@ class PathFinder:
             self._transit_ok[node] = ok
         return ok
 
+    @staticmethod
+    def _scope_of(node: str) -> str:
+        """Cluster-node scope of a device name ("n3:gpu0" -> "n3")."""
+        i = node.find(":")
+        return node[:i] if i > 0 else ""
+
+    def _touch_scopes(self, path, delta_live: int = 0):
+        """Bump the residual generation of every node scope a path
+        touches (and the live-alloc counters when delta_live != 0)."""
+        self._gen += 1
+        seen = None
+        for n in path:
+            s = self._scope_of(n)
+            if seen is None:
+                seen = {s}
+            elif s in seen:
+                continue
+            else:
+                seen.add(s)
+            self._gen_s[s] = self._gen
+            if delta_live:
+                self._n_live_s[s] = self._n_live_s.get(s, 0) + delta_live
+
     def route(self, src: str, dst: str):
         """Topology-shortest route ignoring load (cached fallback)."""
         return self._next_shortest_path(src, dst, free_only=False,
@@ -96,42 +153,109 @@ class PathFinder:
 
         ignore_load=True routes on the raw topology (saturated graph
         fallback: the link simulator arbitrates sharing chunk by chunk).
+
+        Cluster queries are hierarchical: intra-node searches are scoped
+        to the node's subgraph; cross-node queries compose two scoped
+        searches around the direct host-mesh edge and fall back to the
+        cluster-wide search only when the composition fails.
         """
+        ns, nd = self._scope_of(src), self._scope_of(dst)
         if avoid_edges:
             return self._dijkstra(src, dst, free_only=free_only,
                                   avoid_edges=avoid_edges,
-                                  ignore_load=ignore_load)
+                                  ignore_load=ignore_load,
+                                  scope=ns if ns and ns == nd else None)
+        if ns and nd and ns != nd:
+            r = self._compose_cross(src, dst, ns, nd, free_only=free_only,
+                                    ignore_load=ignore_load)
+            if r is not None:
+                return r
+            # mesh edge unusable: cluster-wide search can still route
+            # around via other hosts
         tv = self.topo.version
+        scope = ns if ns and ns == nd else None
         if ignore_load:
             hit = self._topo_cache.get((src, dst))
             if hit is not None and hit[0] == tv:
                 return hit[1], hit[2]
             path, bw = self._dijkstra(src, dst, free_only=free_only,
-                                      ignore_load=True)
+                                      ignore_load=True, scope=scope)
+            if path is None and scope is not None and self._failed_links:
+                path, bw = self._dijkstra(src, dst, free_only=free_only,
+                                          ignore_load=True)
             self._topo_cache[(src, dst)] = (tv, path, bw)
             return path, bw
         key = (src, dst, free_only)
+        gen = self._gen_s.get(scope, 0) if scope is not None else self._gen
         hit = self._res_cache.get(key)
-        if hit is not None and hit[0] == self._gen and hit[1] == tv:
+        if hit is not None and hit[0] == gen and hit[1] == tv:
             return hit[2], hit[3]
-        path, bw = self._dijkstra(src, dst, free_only=free_only)
-        self._res_cache[key] = (self._gen, tv, path, bw)
+        path, bw = self._dijkstra(src, dst, free_only=free_only, scope=scope)
+        if path is None and scope is not None and self._failed_links:
+            # a node subgraph is only disconnected after fail_link
+            # surgery — re-check against the whole graph before giving up
+            path, bw = self._dijkstra(src, dst, free_only=free_only)
+            if path is not None:
+                return path, bw     # out-of-scope route: do not cache
+        self._res_cache[key] = (gen, tv, path, bw)
         return path, bw
 
-    def _transit_adj(self, node):
-        """Transit-allowed neighbors of node, cached on topo.version."""
+    def _compose_cross(self, src, dst, ns, nd, *, free_only: bool,
+                       ignore_load: bool):
+        """Cross-node route as src -> nS:host -> nD:host -> dst.
+
+        Exact on cluster() graphs: hosts are the only inter-node
+        gateways and the host mesh is a clique, so every minimal-hop
+        cross-node path decomposes this way, and hop count / bottleneck
+        optimize independently per piece.  Returns None when any piece
+        is unavailable (caller falls back to the cluster-wide search).
+        """
+        hs, hd = f"{ns}:host", f"{nd}:host"
+        e = (hs, hd)
+        if ignore_load:
+            mbw = self.topo.bw(*e)
+        else:
+            mbw = self.residual.get(e, 0.0)
+            if free_only and self.users.get(e):
+                mbw = 0.0
+        if mbw <= 1e-9:
+            return None
+        if src == hs:
+            p1, b1 = (hs,), float("inf")
+        else:
+            p1, b1 = self._next_shortest_path(src, hs, free_only=free_only,
+                                              ignore_load=ignore_load)
+            if p1 is None:
+                return None
+        if dst == hd:
+            p2, b2 = (hd,), float("inf")
+        else:
+            p2, b2 = self._next_shortest_path(hd, dst, free_only=free_only,
+                                              ignore_load=ignore_load)
+            if p2 is None:
+                return None
+        return tuple(p1) + tuple(p2), min(b1, mbw, b2)
+
+    def _transit_adj(self, node, scope=None):
+        """Transit-allowed neighbors of node (optionally restricted to a
+        cluster-node scope), cached on topo.version."""
         if self._adj_version != self.topo.version:
             self._adj_cache.clear()
             self._adj_version = self.topo.version
-        lst = self._adj_cache.get(node)
+        key = (node, scope)
+        lst = self._adj_cache.get(key)
         if lst is None:
             lst = [nb for nb in self.topo.neighbors(node)
                    if self._is_transit(nb)]
-            self._adj_cache[node] = lst
+            if scope is not None:
+                pre = scope + ":"
+                lst = [nb for nb in lst if nb.startswith(pre)]
+            self._adj_cache[key] = lst
         return lst
 
     def _dijkstra(self, src, dst, *, free_only: bool,
-                  avoid_edges=frozenset(), ignore_load: bool = False):
+                  avoid_edges=frozenset(), ignore_load: bool = False,
+                  scope=None):
         heap = [(0, -1e18, src, (src,))]
         seen = {}
         edges = self.topo.edges
@@ -147,7 +271,7 @@ class PathFinder:
             if sk is not None and sk <= (hops, negbw):
                 continue
             seen[node] = (hops, negbw)
-            nbrs = self._transit_adj(node)
+            nbrs = self._transit_adj(node, scope)
             if dst_needs_extra and (node, dst) in edges:
                 nbrs = nbrs + [dst]
             cap = -negbw
@@ -186,9 +310,17 @@ class PathFinder:
         On a pristine graph (no live allocations) the outcome is a pure
         function of (src, dst, max_paths, topology), so the search result
         is memoized and replayed through `_allocate` — the common case
-        when transfers do not overlap.
+        when transfers do not overlap.  On cluster topologies pristine
+        is judged PER NODE: an intra-node selection replays whenever its
+        own node has no live allocations, regardless of traffic
+        elsewhere in the fleet.
         """
-        if self._n_live == 0:
+        ns, nd = self._scope_of(src), self._scope_of(dst)
+        if ns and ns == nd:
+            pristine = self._n_live_s.get(ns, 0) == 0
+        else:
+            pristine = self._n_live == 0
+        if pristine:
             hit = self._sp_cache.get((src, dst, max_paths))
             if hit is not None and hit[0] == self.topo.version:
                 paths = []
@@ -248,8 +380,8 @@ class PathFinder:
         alloc = PathAlloc(func, tuple(path), bw)
         for a, b in zip(path, path[1:]):
             self.residual[(a, b)] -= bw
-            self.users[(a, b)].add(func)
-        self._gen += 1
+            self.users[(a, b)][func] = None
+        self._touch_scopes(path, delta_live=1)
         self._n_live += 1
         if out_list is not self.allocs[func]:
             self.allocs[func].append(alloc)
@@ -262,8 +394,8 @@ class PathFinder:
             # allocation was live — nothing to give back then
             if (a, b) in self.residual:
                 self.residual[(a, b)] += alloc.bw
-            self.users[(a, b)].discard(func)
-        self._gen += 1
+            self.users[(a, b)].pop(func, None)
+        self._touch_scopes(alloc.path, delta_live=-1)
         self._n_live -= 1
         if alloc in self.allocs[func]:
             self.allocs[func].remove(alloc)
@@ -284,4 +416,5 @@ class PathFinder:
         for e in ((a, b), (b, a)):
             self.residual.pop(e, None)
             self.users.pop(e, None)
-        self._gen += 1
+        self._touch_scopes((a, b))
+        self._failed_links = True

@@ -35,8 +35,9 @@ isoperf CI gate asserts on.
 """
 from __future__ import annotations
 
+import itertools
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 from repro.core.linksim import LinkSim
 
@@ -56,11 +57,27 @@ class _Flow:
     infer_ms: float
     cls: str = FOREGROUND
     refs: int = 1        # concurrent admissions under this func id
+    rl: float = 0.0      # cached rate_least; see _refresh_rl
+    slack: float = 0.0   # cached slo_ms - infer_ms (tightest-flow key)
+    seq: int = field(default_factory=itertools.count().__next__)
+
+    def __post_init__(self):
+        self._refresh_rl()
+
+    @property
+    def tkey(self):
+        """Tightest-flow total order: slack, ties by admission order —
+        exactly what min(flows.values(), key=slack) resolves to, since
+        dict iteration is insertion order."""
+        return (self.slack, self.seq)
+
+    def _refresh_rl(self):
+        self.slack = self.slo_ms - self.infer_ms
+        self.rl = self.size_mb / max(self.slack, 1e-3)
 
     @property
     def rate_least(self) -> float:       # GB/s == MB/ms
-        slack = max(self.slo_ms - self.infer_ms, 1e-3)
-        return self.size_mb / slack
+        return self.rl
 
 
 class PcieScheduler:
@@ -82,6 +99,12 @@ class PcieScheduler:
         self.fg_missed = 0
         self.slo_misses: list[tuple[str, float, float]] = []
         self._admit_t: dict[str, deque] = {}
+        # running sum of foreground rate_least floors and incrementally
+        # tracked tightest flow — _reweigh runs on every admit/complete,
+        # so O(flows) aggregates would make the scheduler O(flows^2) at
+        # fleet concurrency
+        self._total_rl = 0.0
+        self._tightest: _Flow | None = None
 
     # ------------------------------------------------------------ admit ---
     def admit(self, func: str, size_mb: float, slo_ms: float = 1e9,
@@ -107,9 +130,20 @@ class PcieScheduler:
                 fl.refs += 1
                 fl.size_mb, fl.slo_ms, fl.infer_ms = \
                     size_mb, slo_ms, infer_ms
+                self._total_rl -= fl.rl
+                was_tightest = fl is self._tightest
+                fl._refresh_rl()
+                self._total_rl += fl.rl
+                if was_tightest:
+                    self._retighten()     # may have gone looser
+                elif fl.tkey < self._tightest.tkey:
+                    self._tightest = fl
             else:
-                self.flows[func] = _Flow(func, size_mb, slo_ms, infer_ms,
-                                         cls)
+                fl = self.flows[func] = _Flow(func, size_mb, slo_ms,
+                                              infer_ms, cls)
+                self._total_rl += fl.rl
+                if self._tightest is None or fl.tkey < self._tightest.tkey:
+                    self._tightest = fl
                 if self.bg_flows:
                     # a NEW foreground flow shrinks the residual grant;
                     # a refs bump re-uses the existing floor
@@ -152,6 +186,11 @@ class PcieScheduler:
             if fl.refs > 0:
                 return          # siblings still in flight: keep the flow
             del self.flows[func]
+            self._total_rl -= fl.rl
+            if not self.flows:
+                self._total_rl = 0.0    # re-anchor accumulated float drift
+            if fl is self._tightest:
+                self._retighten()       # amortized O(1): 1-in-F completes
             if self.bg_flows:
                 # the flow's LAST completion regrows the residual grant
                 self.promotions += 1
@@ -164,26 +203,41 @@ class PcieScheduler:
     def residual_bw(self) -> float:
         """Bandwidth left after every foreground floor: the background
         class's aggregate grant."""
-        total_least = sum(f.rate_least for f in self.flows.values())
-        return max(self.bw_all - total_least, 0.0)
+        return max(self.bw_all - self._total_rl, 0.0)
+
+    def _retighten(self):
+        self._tightest = min(self.flows.values(),
+                             key=lambda f: f.tkey, default=None)
 
     def _reweigh(self):
-        total_least = sum(f.rate_least for f in self.flows.values())
+        total_least = self._total_rl
         idle = max(self.bw_all - total_least, 0.0)
+        w_tbl = self.sim.weights
+        set_w = self.sim.set_rate_weight
         if self.flows:
             scale = min(1.0, self.bw_all / max(total_least, 1e-9))
-            tightest = min(self.flows.values(),
-                           key=lambda f: f.slo_ms - f.infer_ms)
+            tightest = self._tightest
+            bg_idle = self.bg_flows
             for f in self.flows.values():
-                w = f.rate_least * scale
-                if f.func == tightest.func and not self.bg_flows:
+                w = f.rl * scale
+                if f is tightest and not bg_idle:
                     # no background class active: the idle bandwidth goes
                     # to the tightest-SLO foreground flow (§6.1 rule)
                     w += idle
-                self.sim.set_rate_weight(f.func, w)
+                if w < 1e-6:
+                    w = 1e-6
+                # ~95% of per-admit weight refreshes land on the value
+                # already installed (identical rate floors at scale):
+                # skip the call, not just its body — this loop runs
+                # O(flows) on every admit/complete
+                if w_tbl.get(f.func, 1.0) != w:
+                    set_w(f.func, w)
         if self.bg_flows:
             # residual-bandwidth grant, split evenly across bg flows;
             # recomputed here on every admit/complete = demote/promote
             w = max(idle, self.bg_floor) / len(self.bg_flows)
+            if w < 1e-6:
+                w = 1e-6
             for f in self.bg_flows.values():
-                self.sim.set_rate_weight(f.func, w)
+                if w_tbl.get(f.func, 1.0) != w:
+                    set_w(f.func, w)
