@@ -34,7 +34,8 @@ def _slo_ms(wname: str) -> float:
     return 1.5 * (isolated_compute_ms(WORKFLOWS[wname]) + PASSING_MS[wname])
 
 
-def run_pair(partner: str, cfg, partner_scale: float = 8.0):
+def run_pair(partner: str, cfg, partner_scale: float = 8.0,
+             scale_ms: float = 10.0, n: int = 24):
     """Run driving + partner concurrently; return driving's
     (p99, slo%, engine).
 
@@ -51,7 +52,7 @@ def run_pair(partner: str, cfg, partner_scale: float = 8.0):
     eng = run_mixed(dgx_v100, cfg,
                     [(WORKFLOWS["driving"], "bursty", f_d),
                      (wp, "bursty", f_p)],
-                    n=24, scale_ms=10.0)
+                    n=n, scale_ms=scale_ms)
     # P99 of execution latency EXCLUDING queueing (paper §9.2 methodology)
     lat = [exec_ms(r) for r in eng.completed if abs(r.slo_ms - slo_d) < 1e-6]
     ok = 100 * sum(1 for x in lat if x <= slo_d) / len(lat)
@@ -78,11 +79,18 @@ def main():
          "paper: ~0% (identical)")
 
     # (c) migration interference: same contended pair under the tightest
-    # memstress store cap, so spills/reloads hit the driving PCIe links
+    # memstress store cap, so spills/reloads hit the driving PCIe links.
+    # The trace is 2x longer than (a)'s: spills here come from a
+    # cap-sized output DWELLING on its producer GPU when the next
+    # request's store lands, and saturated-multipath striping drains
+    # intermediates fast enough that (a)'s 24-request trace no longer
+    # overlaps them — this part is only meaningful with migration
+    # genuinely live (the mig>0 assert below).
     tight = dataclasses.replace(FAASTUBE, store_cap_mb=TIGHT_CAP_MB)
-    p99_mig, ok_mig, eng = run_pair("video", tight)
+    p99_mig, ok_mig, eng = run_pair("video", tight, n=48)
     p99_mno, ok_mno, _ = run_pair(
-        "video", dataclasses.replace(NO_PS, store_cap_mb=TIGHT_CAP_MB))
+        "video", dataclasses.replace(NO_PS, store_cap_mb=TIGHT_CAP_MB),
+        n=48)
     red_mig = 100 * (1 - p99_mig / p99_mno)
     st, sched, sim = eng.tube.stats, eng.tube.sched, eng.tube.sim
     bg_mb = sim.mb_by_class["bg"]

@@ -92,8 +92,11 @@ def main():
             # pool="none" baseline actually migrate under this cap
             assert eng_ft.tube.stats["migrations"] > 0
             assert eng_noap.tube.stats["migrations"] > 0
-    # honest NVLink-only band (see NO_PRESSURE note): traffic ~7%
-    assert max(gains.values()) >= 5.0, gains
+    # honest NVLink-only band (see NO_PRESSURE note): traffic ~8% with
+    # the saturated-multipath stripe fallback (7.4% before it), and all
+    # three workflows now gain vs MAPA (video was -1.5% single-route)
+    assert max(gains.values()) >= 6.0, gains
+    assert min(gains.values()) >= 0.0, gains
     return gains
 
 

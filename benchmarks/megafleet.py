@@ -30,10 +30,16 @@ from repro.core.api import SYSTEMS
 N_NODES = 64
 N_APPS = 512         # app instances, round-robin over nodes
 REQS_PER_APP = 8     # 512 x 8 = 4096 concurrent workflows
+#: The TransferPlan engine's saturated-multipath striping simulates
+#: ~16% more chunk-bursts per trace (963,920 -> 1,116,574 events), so
+#: the original 60 s budget lost its load-variance headroom (~53 s
+#: standalone on this box, ~70 s after fig17+fleet in one process);
+#: 90 s keeps the same ~1.7x margin and still catches an engine that
+#: regresses to infeasible (the pre-coalescing engine took minutes).
 #: wall budget in seconds; overridable for operators on slow/shared
 #: boxes (the development container runs this in ~35-55 s depending on
 #: machine phase — the margin is real, so CI keeps the default)
-WALL_BUDGET_S = float(os.environ.get("MEGAFLEET_BUDGET_S", "60"))
+WALL_BUDGET_S = float(os.environ.get("MEGAFLEET_BUDGET_S", "90"))
 
 
 def main():

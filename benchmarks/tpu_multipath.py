@@ -7,6 +7,12 @@ orthogonal ports idle.  The pathfinder stripes chunks over edge-disjoint
 torus paths (X-then-Y, Y-then-X, wraparounds) and routes around
 contention, exactly like NVLink multi-path on the DGX.
 
+The transfers run through the same TransferEngine the tube uses — the
+single-path arm compiles with ``g2g="direct"`` (one
+`PathFinder.shortest_residual_path` route), the multi-path arm with
+``g2g="multipath"`` (Alg. 1 allocations + the saturated-fallback
+stripes); no benchmark-local striping.
+
 Also reports the dry-run cross-check: collective bytes per decode step of
 the jamba prefill->decode handoff cell (from dryrun_results.json).
 """
@@ -15,7 +21,9 @@ from __future__ import annotations
 from repro.core.api import FAASTUBE, FaaSTube, TubeConfig
 from repro.core.linksim import LinkSim
 from repro.core.pathfinder import PathFinder
+from repro.core.pinned_buffer import CircularPinnedBuffer
 from repro.core.topology import tpu_torus
+from repro.core.transfer import TransferEngine
 from benchmarks.common import emit
 
 
@@ -23,21 +31,20 @@ def p2p(topo, src, dst, size_mb, *, multipath, background=()):
     """One striped transfer src->dst; background: [(src,dst,size_mb)]."""
     sim = LinkSim(topo, policy="drr")
     pf = PathFinder(topo, transit="chip")
+    engine = TransferEngine(
+        sim, pf, CircularPinnedBuffer(policy="none"), topo,
+        g2g="multipath" if multipath else "direct")
     done = {}
 
-    def submit(name, s, d, mb, mp):
-        if mp:
-            allocs = pf.select_paths(name, s, d)
-            paths = [(a.path, a.bw) for a in allocs]
-        else:
-            path, bw = pf._next_shortest_path(s, d, free_only=False)
-            paths = [(path, bw)]
-        sim.submit(name, paths, mb,
-                   on_done=lambda _s, tr: done.__setitem__(name, tr.t_done))
+    def submit(name, s, d, mb):
+        plan = engine.compile("g2g", name, s, d, mb)
+        engine.submit(plan, 0.0,
+                      on_done=lambda _s, tr: done.__setitem__(name,
+                                                              tr.t_done))
 
     for i, (bs, bd, bmb) in enumerate(background):
-        submit(f"bg{i}", bs, bd, bmb, multipath)
-    submit("main", src, dst, size_mb, multipath)
+        submit(f"bg{i}", bs, bd, bmb)
+    submit("main", src, dst, size_mb)
     sim.run()
     return done["main"]
 

@@ -1,9 +1,13 @@
 """FaaSTube core: GPU/TPU-oriented inter-function data passing.
 
 Public surface:
-    FaaSTube (api.py)           — unique_id / store / fetch
+    FaaSTube (api.py)           — unique_id / store / fetch (policy facade)
+    TransferEngine (transfer.py)— TransferPlan compilation + execution:
+                                  every data movement is a declarative
+                                  plan through one engine
     Topology (topology.py)      — DGX-V100 / DGX-A100 / 4xA10 / TPU torus
-    PathFinder (pathfinder.py)  — Alg. 1 contention-aware parallel paths
+    PathFinder (pathfinder.py)  — Alg. 1 contention-aware parallel paths,
+                                  shortest_residual_path / striped_paths
     LinkSim (linksim.py)        — discrete-event link timing model
     ElasticPool (elastic_pool.py), QueueAwareMigrator (migration.py)
     PcieScheduler (pcie_scheduler.py), CircularPinnedBuffer (pinned_buffer.py)
@@ -11,3 +15,4 @@ Public surface:
 from repro.core.topology import Topology, make_topology
 from repro.core.pathfinder import PathFinder
 from repro.core.linksim import LinkSim
+from repro.core.transfer import TransferEngine, TransferPlan

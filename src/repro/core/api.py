@@ -1,16 +1,20 @@
 """FaaSTube facade (paper §5, Listing 1): unique_id / store / fetch.
 
-Dispatches each fetch to the right transfer method from the data's and the
-requester's locations (paper Fig. 8):
+The facade is the POLICY layer: it resolves locations through the
+unified index, walks the store-side memory-pressure state machine, and
+SLO-admits foreground work.  Every actual data movement compiles to a
+declarative :class:`~repro.core.transfer.TransferPlan` and executes
+through the :class:`~repro.core.transfer.TransferEngine` — one engine
+for fetch, put, g2g, h2g, inter-node, spill, demand reload and prefetch,
+instead of per-kind completion-closure chains (see transfer.py for the
+plan/engine architecture, staging modes and the bounded pinned ring).
 
-  intra-GPU   — CUDA-IPC map + device copy
-  inter-GPU   — NVLink/ICI paths: direct single path, or contention-aware
-                multi-path (pathfinder), or through host memory (baselines)
-  host-GPU    — PCIe: single link or parallel links via neighbor devices
-                (the pathfinder treats host+pcie+gpu as one graph), SLO-rate
-                controlled, staged through the circular pinned buffer
-  inter-node  — pipelined gpu->host->net->host->gpu (multi-hop chunks flow;
-                the host-oriented baselines do the three stages sequentially)
+Fetch dispatch (paper Fig. 8): intra-GPU -> ipc plan; same-node
+inter-GPU -> g2g plan (direct / multipath / via host per config);
+host-GPU -> h2g/g2h plans (PCIe, SLO-rate controlled, staged through
+the circular pinned buffer); inter-node -> internode plan
+(gpu->host->net->host->gpu; cut-through chunks flow hop-overlapped,
+store-forward baselines run the stages sequentially).
 
 Store-side: every stored intermediate walks an explicit, transfer-
 completion-driven location state machine (migration.py):
@@ -41,15 +45,22 @@ from dataclasses import dataclass
 
 from repro.core.elastic_pool import BLOCK_MB, ElasticPool, blocks_for
 from repro.core.index import DataIndex, DataRecord
-from repro.core.linksim import IPC_MS, LinkSim, alloc_ms
+from repro.core.linksim import LinkSim, alloc_ms
 from repro.core.migration import (
     DEVICE, HOST, RELOADING, SPILLING, Migrator, StoredItem)
 from repro.core.pathfinder import PathFinder
 from repro.core.pcie_scheduler import BACKGROUND, PcieScheduler
 from repro.core.pinned_buffer import CircularPinnedBuffer
 from repro.core.topology import PCIE_PINNED, Topology
+from repro.core.transfer import (
+    CUT_THROUGH, STORE_FORWARD, TransferEngine, host_of, is_device,
+    node_of)
 
-HBM_COPY_BW = 600.0      # intra-device copy GB/s
+# location helpers are shared data-plane vocabulary (transfer.py);
+# legacy underscore spellings kept for callers of the old facade
+_node_of = node_of
+_host_of = host_of
+_is_dev = is_device
 
 
 @dataclass(frozen=True)
@@ -62,7 +73,13 @@ class TubeConfig:
     pool: str = "elastic"         # none | cache_all | elastic
     migration: str = "queue"      # queue | lru
     unified_index: bool = True
-    internode: str = "pipelined"  # pipelined | sequential
+    # multi-hop staging mode (g2g via host, inter-node): cut_through
+    # stitches the hops so chunks flow hop-overlapped through the
+    # bounded pinned ring; store_forward (the host-oriented baselines,
+    # and the contrast arm pinned by the equivalence suite) starts hop
+    # k+1 only when the entire hop-k copy has landed — the old
+    # ``internode="sequential"`` + two-stage g2g-via-host behaviour.
+    staging: str = CUT_THROUGH
     store_cap_mb: float = 1024.0
     # admit spill/prefetch transfers as BACKGROUND-class flows (residual
     # bandwidth only); False submits them straight to the link simulator
@@ -87,7 +104,7 @@ class TubeConfig:
 INFLESS = TubeConfig(name="infless+", g2g="host", h2g="single",
                      pinned="none", slo_sched=False, pool="none",
                      migration="lru", unified_index=False,
-                     internode="sequential")
+                     staging=STORE_FORWARD)
 # DeepPlan's direct-host-access design pre-pins its staging at load time
 # (cached pinned, no per-transfer cost); FaaSTube* pins per transfer —
 # the paper's §9.3 says it stays "constrained by pinned memory allocation
@@ -95,28 +112,13 @@ INFLESS = TubeConfig(name="infless+", g2g="host", h2g="single",
 DEEPPLAN = TubeConfig(name="deepplan+", g2g="host", h2g="parallel",
                       pinned="circular", slo_sched=False, pool="none",
                       migration="lru", unified_index=False,
-                      internode="sequential")
+                      staging=STORE_FORWARD)
 FAASTUBE_STAR = TubeConfig(name="faastube*", g2g="direct", h2g="parallel",
                            pinned="per_transfer", slo_sched=False,
-                           pool="none", migration="lru", unified_index=True,
-                           internode="pipelined")
+                           pool="none", migration="lru", unified_index=True)
 FAASTUBE = TubeConfig(name="faastube")
 
 SYSTEMS = {c.name: c for c in (INFLESS, DEEPPLAN, FAASTUBE_STAR, FAASTUBE)}
-
-
-def _node_of(device: str) -> str:
-    return device.split(":")[0] if ":" in device else ""
-
-
-def _host_of(device: str) -> str:
-    n = _node_of(device)
-    return f"{n}:host" if n else "host"
-
-
-def _is_dev(name: str) -> bool:
-    return name.startswith(("gpu", "chip")) or ":gpu" in name \
-        or ":chip" in name
 
 
 class FaaSTube:
@@ -130,9 +132,17 @@ class FaaSTube:
         self.pools: dict[str, ElasticPool] = {}
         self.items: dict[str, dict[str, StoredItem]] = {}
         self.migrator = Migrator(cfg.migration)
-        self.pinned = CircularPinnedBuffer(policy=cfg.pinned)
+        # warmed=True: the tube daemon (and DeepPlan's model loader)
+        # pre-pin the staging ring at STARTUP, off any request's critical
+        # path — the one-time size_mb pin cost is paid, just not by a
+        # request.  Bare CircularPinnedBuffer() charges it on first use.
+        self.pinned = CircularPinnedBuffer(policy=cfg.pinned, warmed=True)
         self.sched = PcieScheduler(self.sim, bw_all=4 * PCIE_PINNED) \
             if cfg.slo_sched else None
+        self.engine = TransferEngine(
+            self.sim, self.pf, self.pinned, topo, g2g=cfg.g2g,
+            h2g=cfg.h2g, staging=cfg.staging, sched=self.sched,
+            migrator=self.migrator, bg_migration=cfg.bg_migration)
         self.stats = {"h2g_ms": 0.0, "g2g_ms": 0.0, "alloc_ms": 0.0,
                       "migrations": 0, "reloads": 0}
         # pool="none" baselines have no block pool, but resident bytes per
@@ -153,7 +163,7 @@ class FaaSTube:
         if device not in self.pools:
             # host memory is not the contended resource: only device
             # stores enforce the paper's store capacity
-            cap = self.cfg.store_cap_mb if _is_dev(device) else float("inf")
+            cap = self.cfg.store_cap_mb if is_device(device) else float("inf")
             self.pools[device] = ElasticPool(
                 device, capacity_mb=cap,
                 elastic=self.cfg.pool == "elastic")
@@ -284,44 +294,21 @@ class FaaSTube:
             self._pending.pop(device, None)
 
     # ---------------------------------------------------- spill / reload --
-    def _submit_migration(self, owner: str, src: str, dst: str,
-                          size_mb: float, t: float, kind: str,
-                          on_done=None):
-        """Submit a spill/prefetch transfer as a BACKGROUND-class flow.
-
-        Migration traffic is admitted through the PCIe scheduler under
-        its own flow id (one per transfer) so it is granted only the
-        residual bandwidth left by SLO-admitted foreground fetches —
-        never submitted straight to the link simulator where it would
-        contend at parity.  Demand reloads are NOT routed here: they
-        block a foreground fetch and ride that fetch's own foreground
-        admission (see fetch/_demand_reload).
-        """
-        if self.sched is None or not self.cfg.bg_migration:
-            return self._submit_path(owner, src, dst, size_mb, t, kind,
-                                     on_done=on_done)
-        flow = self.migrator.flow(owner)
-        self.migrator.bg_submitted_mb += size_mb
-        self.sched.admit(flow, size_mb, cls=BACKGROUND, t=t)
-
-        def finish(sim, tr):
-            self.sched.complete(flow, t=sim.now)
-            if on_done is not None:
-                on_done(sim, tr)
-        return self._submit_path(flow, src, dst, size_mb, t, kind,
-                                 on_done=finish)
-
     def _spill(self, v: StoredItem, device: str, now: float):
         """DEVICE -> SPILLING.  The HBM copy stays valid (and allocated)
-        until the g2h transfer completes."""
+        until the g2h transfer completes.  The plan is BACKGROUND class:
+        the engine admits it as a per-transfer migration flow granted
+        only residual bandwidth (or at foreground parity when
+        ``bg_migration=False``, the contrast arm)."""
         v.set_state(SPILLING)
-        v.host = _host_of(device)
+        v.host = host_of(device)
         self.stats["migrations"] += 1
 
         def landed(sim, tr=None):
             self._spill_complete(v, device, sim.now)
-        self._submit_migration(v.func or "migrate", device, v.host,
-                               v.size_mb, now, "g2h", on_done=landed)
+        plan = self.engine.compile("spill", v.func or "migrate", device,
+                                   v.host, v.size_mb, cls=BACKGROUND)
+        self.engine.submit(plan, now, on_done=landed)
 
     def _spill_complete(self, v: StoredItem, device: str, t: float):
         """SPILLING -> HOST: free the HBM blocks and flip the index
@@ -343,8 +330,8 @@ class FaaSTube:
         paying destination allocation + PCIe h2g.  The index flips back
         to "device" only when the copy lands."""
         self.stats["reloads"] += 1
-        src_host = rec.device if rec.device and not _is_dev(rec.device) \
-            else (item.host or _host_of(dst))
+        src_host = rec.device if rec.device and not is_device(rec.device) \
+            else (item.host or host_of(dst))
         home = self._home.get(item.data_id, dst)
         item.set_state(RELOADING)
 
@@ -367,7 +354,11 @@ class FaaSTube:
             def landed(sim, tr=None):
                 self._reload_complete(item, rec, dst, sim)
                 done(sim)
-            self._h2g(func, src_host, dst, rec.size_mb, t + cost, landed)
+            # the reload blocks a foreground fetch, so it rides that
+            # fetch's own foreground admission (not the migration class)
+            plan = self.engine.compile("reload", func, src_host, dst,
+                                       rec.size_mb)
+            self.engine.submit(plan, t + cost, on_done=landed)
 
         self._reserve(dst, item.func or func, rec.size_mb, t0, grant)
 
@@ -409,11 +400,11 @@ class FaaSTube:
                           func=func)
         self.items[device][data_id] = item
         self._home[data_id] = device
-        rec = DataRecord(data_id, _node_of(device), device, size_mb,
+        rec = DataRecord(data_id, node_of(device), device, size_mb,
                          "device", -1)
         self.index.publish(rec)
 
-        if not _is_dev(device):
+        if not is_device(device):
             # host-side store: host memory is unbounded, never spills
             if self.cfg.pool == "none":
                 buf, cost = -1, alloc_ms(size_mb)
@@ -446,10 +437,31 @@ class FaaSTube:
         self._reserve(device, func, size_mb, now, grant)
         return now   # lower bound; true ready time arrives via on_ready
 
+    # --------------------------------------------------------------- fetch -
+    def _movement(self, src: str, dst: str, spilled: bool) -> str:
+        """Fig. 8 dispatch: resolve locations to a plan kind."""
+        src_dev, dst_dev = is_device(src), is_device(dst)
+        if spilled and dst_dev:
+            return "reload"
+        if spilled:
+            # host-side consumer of host-resident data: a shm read on
+            # the spill host's node (unqualified "host" consumers are
+            # node-less cpu stages), but a NET transfer when the
+            # consumer names another node's host
+            return "shm" if node_of(src) == node_of(dst) \
+                or not node_of(dst) else "h2h"
+        if src == dst:
+            return "ipc" if dst_dev else "shm"
+        if src_dev and dst_dev:
+            return "g2g" if node_of(src) == node_of(dst) else "internode"
+        if src_dev:
+            return "g2h"
+        return "h2g"
+
     def fetch(self, func: str, data_id: str, dst: str, now: float, *,
               slo_ms: float = 1e9, infer_ms: float = 0.0, on_ready=None):
         """Fetch data_id into dst's address space; on_ready(sim, t) called."""
-        rec, lk = self.index.lookup(_node_of(dst), data_id)
+        rec, lk = self.index.lookup(node_of(dst), data_id)
         if not self.cfg.unified_index:
             lk += 0.1                     # per-op RPC instead of local pipe
         t0 = now + lk
@@ -464,14 +476,14 @@ class FaaSTube:
                 func, data_id, dst, t, slo_ms=slo_ms, infer_ms=infer_ms,
                 on_ready=on_ready))
             return
-        dst_is_dev = _is_dev(dst)
         # HOST only: a SPILLING item's device copy is still valid — a
         # racing fetch coherently reads it through the normal paths below
         spilled = item is not None and item.state == HOST
         src = rec.device
         if item is not None:
             item.last_access = t0
-        if self.cfg.pool == "none" and dst_is_dev and src != dst \
+        kind = self._movement(src, dst, spilled)
+        if self.cfg.pool == "none" and is_device(dst) and src != dst \
                 and not spilled:
             # receiver allocates the destination buffer with cudaMalloc;
             # pooled configs serve it from warm blocks for free (reloads
@@ -481,8 +493,8 @@ class FaaSTube:
             t0 += c
 
         # foreground-class admission with the caller's SLO context; a
-        # demand reload of spilled data below rides this same admission
-        # (it blocks this fetch, so it is foreground work, not migration)
+        # demand reload of spilled data rides this same admission (it
+        # blocks this fetch, so it is foreground work, not migration)
         if self.sched:
             self.sched.admit(func, rec.size_mb, slo_ms, infer_ms, t=now)
 
@@ -492,39 +504,15 @@ class FaaSTube:
             if on_ready:
                 on_ready(sim, sim.now)
 
-        src_is_dev = _is_dev(src)
-        # spilled data lives in host memory: the reload MUST be checked
-        # before the src == dst shared-memory shortcut, or a same-device
-        # refetch of a spilled item is served as a free shm read
-        if spilled and dst_is_dev:
+        if kind == "reload":
             self._demand_reload(func, item, rec, dst, t0, done)
-        elif spilled:
-            # host-side consumer of host-resident data: a shm read on
-            # the spill host's node (unqualified "host" consumers are
-            # node-less cpu stages), but a NET transfer when the
-            # consumer names another node's host
-            if _node_of(src) == _node_of(dst) or not _node_of(dst):
-                self.sim.call_at(t0 + 0.001, lambda sim: done(sim))
-            else:
-                self._submit_path(func, src, dst, rec.size_mb, t0, "h2h",
-                                  on_done=lambda s, tr: done(s))
-        elif src == dst:
-            if dst_is_dev:               # intra-GPU: IPC map + HBM copy
-                t_ready = t0 + IPC_MS + rec.size_mb / HBM_COPY_BW
-                self.sim.call_at(t_ready, lambda sim: done(sim))
-            else:                        # both host-side: shared memory
-                self.sim.call_at(t0 + 0.001, lambda sim: done(sim))
-        elif src_is_dev and dst_is_dev and _node_of(src) == _node_of(dst):
-            self._g2g(func, src, dst, rec.size_mb, t0, done)
-        elif src_is_dev and dst_is_dev:
-            self._internode(func, src, dst, rec.size_mb, t0, done)
-        elif src_is_dev:                     # device -> host
-            self._submit_path(func, src, _host_of(src), rec.size_mb, t0,
-                              "g2h", on_done=lambda s, tr: done(s),
-                              multipath=self.cfg.h2g == "parallel")
-        else:                                # host -> device
-            self._h2g(func, src if src else _host_of(dst), dst,
-                      rec.size_mb, t0, done)
+            return
+        a, b = src, dst
+        if kind == "h2g" and not src:
+            a = host_of(dst)
+        plan = self.engine.compile(kind, func, a, b, rec.size_mb,
+                                   slo_ms=slo_ms, infer_ms=infer_ms)
+        self.engine.submit(plan, t0, on_done=done)
 
     def put(self, func: str, src_dev: str, size_mb: float, now: float, *,
             slo_ms: float = 1e9, infer_ms: float = 0.0, on_done=None):
@@ -542,98 +530,10 @@ class FaaSTube:
                 self.sched.complete(func, t=sim.now)
             if on_done is not None:
                 on_done(sim, tr)
-        return self._submit_path(func, src_dev, _host_of(src_dev), size_mb,
-                                 now, "g2h", on_done=done,
-                                 multipath=self.cfg.h2g == "parallel")
-
-    # ----------------------------------------------------------- methods --
-    def _submit_path(self, func, src, dst, size_mb, t, kind, on_done=None,
-                     multipath=False):
-        alloc_key = None
-        if multipath:
-            # hold the path allocation until the transfer completes so
-            # concurrent transfers see each other's usage (Alg. 1 is
-            # contention-aware only if the BW matrix reflects live flows)
-            alloc_key = f"{func}@{t}"
-            allocs = self.pf.select_paths(alloc_key, src, dst)
-            paths = [(a.path, a.bw) for a in allocs]
-            if not paths:
-                # graph saturated: share the topology-shortest route (a
-                # route-cache hit after the first query); the DRR link sim
-                # arbitrates chunk-level sharing
-                alloc_key = None
-                path, bw = self.pf.route(src, dst)
-                paths = [(path, bw)] if path else \
-                    [((src, dst), max(self.topo.bw(src, dst), 1e-3))]
-        else:
-            path, bw = self.pf.route(src, dst)
-            paths = [(path, bw)] if path else [((src, dst), 1e-3)]
-        pin, pinned_ok = (self.pinned.acquire(size_mb)
-                          if kind in ("h2g", "g2h") else (0.0, True))
-
-        def finish(sim, tr):
-            if alloc_key is not None:
-                self.pf.release(alloc_key)
-            if on_done is not None:
-                on_done(sim, tr)
-
-        return self.sim.submit(func, paths, size_mb, t=t,
-                               pin_fresh_mb=pin, on_done=finish,
-                               unpinned=not pinned_ok)
-
-    def _g2g(self, func, src, dst, size_mb, t, done):
-        if self.cfg.g2g == "host":
-            # two sequential PCIe copies through host memory
-            def second(sim, tr):
-                self._submit_path(func, _host_of(dst), dst, size_mb,
-                                  sim.now, "h2g", on_done=done)
-            self._submit_path(func, src, _host_of(src), size_mb, t, "g2h",
-                              on_done=second)
-        elif self.cfg.g2g == "direct":
-            self._submit_path(func, src, dst, size_mb, t, "g2g",
-                              on_done=done)
-        else:
-            self._submit_path(func, src, dst, size_mb, t, "g2g",
-                              on_done=done, multipath=True)
-
-    def _h2g(self, func, src_host, dst, size_mb, t, done):
-        self._submit_path(func, src_host, dst, size_mb, t, "h2g",
-                          on_done=done,
-                          multipath=self.cfg.h2g == "parallel")
-
-    def _internode(self, func, src, dst, size_mb, t, done):
-        hs, hd = _host_of(src), _host_of(dst)
-        if self.cfg.internode == "pipelined":
-            path = self._stitch(src, hs, hd, dst)
-            pin, pinned_ok = self.pinned.acquire(size_mb)
-            self.sim.submit(func, [(path, 1.0)], size_mb, t=t,
-                            pin_fresh_mb=pin, unpinned=not pinned_ok,
-                            on_done=lambda s, tr: done(s))
-        else:
-            def stage3(sim, tr):
-                self._submit_path(func, hd, dst, size_mb, sim.now, "h2g",
-                                  on_done=done)
-
-            def stage2(sim, tr):
-                self.sim.submit(func, [((hs, hd), 1.0)], size_mb, t=sim.now,
-                                on_done=stage3)
-            self._submit_path(func, src, hs, size_mb, t, "g2h",
-                              on_done=stage2)
-
-    def _stitch(self, src, hs, hd, dst):
-        p1, _ = self.pf._next_shortest_path(src, hs, free_only=False)
-        p2, _ = self.pf._next_shortest_path(hd, dst, free_only=False)
-        if p1 is None:
-            # residual exhausted under load: fall back to the topology
-            # route (chunk-level sharing), never to a fake direct edge —
-            # a gpu has no host link, so the old (src, hs) fallback
-            # simulated a 0-bandwidth hop at fleet-scale concurrency
-            p1, _ = self.pf.route(src, hs)
-        if p2 is None:
-            p2, _ = self.pf.route(hd, dst)
-        p1 = p1 or (src, hs)
-        p2 = p2 or (hd, dst)
-        return tuple(p1) + tuple(p2)
+        plan = self.engine.compile("g2h", func, src_dev,
+                                   host_of(src_dev), size_mb,
+                                   slo_ms=slo_ms, infer_ms=infer_ms)
+        return self.engine.submit(plan, now, on_done=done)
 
     # ------------------------------------------------------------ consume -
     def consume(self, data_id: str, device: str, now: float):
@@ -647,7 +547,7 @@ class FaaSTube:
             return
         freed_dev = it.held or home      # RELOADING items hold on their dst
         self._release_item(it, rec, now)
-        if not _is_dev(freed_dev):
+        if not is_device(freed_dev):
             return
         self._drain_pending(freed_dev, now)
         if self.cfg.migration != "queue":
@@ -665,7 +565,7 @@ class FaaSTube:
         prec = self.index.global_table.get(p.data_id)
         if prec is None:
             return
-        src_host = p.host or _host_of(device)
+        src_host = p.host or host_of(device)
         p.set_state(RELOADING)
         res = self._try_alloc(device, p.func or "prefetch", p.size_mb, now)
         if res is None:
@@ -679,5 +579,7 @@ class FaaSTube:
 
         def back(sim, tr=None, p=p):
             self._reload_complete(p, prec, device, sim)
-        self._submit_migration(p.func or "prefetch", src_host, device,
-                               p.size_mb, now + cost, "h2g", on_done=back)
+        plan = self.engine.compile("prefetch", p.func or "prefetch",
+                                   src_host, device, p.size_mb,
+                                   cls=BACKGROUND)
+        self.engine.submit(plan, now + cost, on_done=back)

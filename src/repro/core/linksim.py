@@ -101,6 +101,14 @@ chunk-exact *semantics* but dispatches at burst granularity:
 the same pick logic — the semantic reference (equivalent to the seed
 engine) used by the equivalence tests in `tests/test_linksim_equiv.py`.
 
+Staging back-pressure: `submit(..., stage=ring, stage_mb=w,
+stage_cls=..., stage_key=host)` makes a transfer reserve `w` MB of the
+bounded circular pinned ring (per staging host) before its first chunk
+may move; a full ring parks the launch on the ring's waiter queue and
+the wait is real transfer latency.  The reservation is released at
+transfer completion (see pinned_buffer.py for the occupancy/class
+rules).
+
 Time unit: ms.  Sizes: MB.  Bandwidth GB/s (== MB/ms, so t = size/bw).
 
 Cost model knobs (paper-calibrated):
@@ -118,6 +126,7 @@ from collections import deque
 from dataclasses import dataclass
 from heapq import heappop, heappush
 
+from repro.core.pinned_buffer import FOREGROUND
 from repro.core.topology import Topology, PCIE_UNPINNED
 
 PIN_MS_PER_MB = 0.7
@@ -149,6 +158,10 @@ class Transfer:
     extra_latency: float = 0.0    # pin/alloc costs folded in
     on_done: object = None        # callback(sim, transfer)
     unpinned: bool = False        # host-adjacent hops capped at 3 GB/s
+    stage: object = None          # staging ring holding this transfer's
+    stage_mb: float = 0.0         # ..occupancy window, released on finish
+    stage_cls: str = FOREGROUND   # ring-occupancy class (fg | bg)
+    stage_key: str = "host"       # which host's ring (rings are per host)
 
 
 class _Burst:
@@ -583,8 +596,19 @@ class LinkSim:
     def submit(self, func: str, paths, size_mb: float, *,
                t: float | None = None, pin_fresh_mb: float = 0.0,
                alloc_fresh_mb: float = 0.0, ipc_handles: int = 0,
-               on_done=None, unpinned: bool = False) -> int:
-        """Submit a (possibly multi-path) transfer.  paths: [(path, bw)]."""
+               on_done=None, unpinned: bool = False,
+               stage=None, stage_mb: float = 0.0,
+               stage_cls: str = FOREGROUND,
+               stage_key: str = "host") -> int:
+        """Submit a (possibly multi-path) transfer.  paths: [(path, bw)].
+
+        ``stage``/``stage_mb``: staging back-pressure.  The transfer must
+        reserve ``stage_mb`` of the staging ring (``stage.try_reserve``)
+        before its first chunk may move; when the ring is full the launch
+        is parked on the ring's FIFO (``stage.wait``) and fires at the
+        grant time — the wait is real latency on the transfer.  The
+        reservation is released at transfer completion, waking waiters.
+        """
         t = self.now if t is None else t
         tid = next(self._tid)
         tr = Transfer(tid, func, size_mb, list(paths), t, on_done=on_done,
@@ -626,6 +650,26 @@ class LinkSim:
                 self.call_at(start, lambda sim, tr=tr: tr.on_done(sim, tr))
             return tid
         self._func_tr[func] = self._func_tr.get(func, 0) + 1
+        if stage is not None and stage_mb > 0.0:
+            tr.stage, tr.stage_mb, tr.stage_cls = stage, stage_mb, stage_cls
+            tr.stage_key = stage_key
+            # ring full (or transfers already parked that this one must
+            # not jump): park the launch; it fires when an in-flight
+            # window is released (back-pressure — the wait is part of
+            # the transfer's latency, t_submit stays put)
+            if not stage.reserve_or_wait(
+                    stage_mb,
+                    lambda t_grant, tr=tr, real=real, lm=last_mb:
+                    self._launch(tr, real, lm,
+                                 max(t_grant, tr.t_submit)
+                                 + tr.extra_latency),
+                    stage_cls, stage_key):
+                return tid
+        self._launch(tr, real, last_mb, start)
+        return tid
+
+    def _launch(self, tr: Transfer, real, last_mb: float, start: float):
+        """Schedule the per-path chunk arrival events of a transfer."""
         trig = TRIGGER_MS / BATCH_CHUNKS
         for pi, (path, n, ci0) in enumerate(real):
             # batched triggering: chunk ci launches at start + (ci//B)*trig.
@@ -635,11 +679,10 @@ class LinkSim:
             # chunk finish times are unchanged.
             segs = [(start + ci0 * trig, trig, n)]
             is_last_path = pi == len(real) - 1
-            b = _Burst(tid, func, path, 0, n, self.chunk_mb,
+            b = _Burst(tr.tid, tr.func, path, 0, n, self.chunk_mb,
                        last_mb if is_last_path else self.chunk_mb, segs)
             heappush(self._events,
                      (segs[0][0], next(self._seq), "arrive", b))
-        return tid
 
     # ------------------------------------------------------------ engine --
     def _link_bw(self, link) -> tuple:
@@ -1569,6 +1612,11 @@ class LinkSim:
 
     def _finish_transfer(self, tr):
         tr.t_done = self.now
+        if tr.stage is not None:
+            # return the staging-ring window; may launch parked transfers
+            tr.stage.release(tr.stage_mb, self, tr.stage_cls,
+                             tr.stage_key)
+            tr.stage = None
         # per-class delivered bytes (before on_done, which may evict the
         # function's class registration via the scheduler)
         cls = "bg" if tr.func in self._cls_bg else "fg"

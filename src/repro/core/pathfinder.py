@@ -87,6 +87,7 @@ class PathFinder:
         self._n_live_s: dict[str, int] = {}
         self._res_cache: dict = {}    # (src,dst,free_only) -> (gen, tv, p, bw)
         self._topo_cache: dict = {}   # (src,dst) -> (topo_version, path, bw)
+        self._stripe_cache: dict = {}  # (src,dst,k) -> (tv, [(path, bw)])
         self._sp_cache: dict = {}     # pristine-graph select_paths results
         self._transit_ok: dict = {}   # node -> allowed as intermediate hop
         self._transit_prefixes = tuple(self.transit.split(","))
@@ -145,6 +146,62 @@ class PathFinder:
         """Topology-shortest route ignoring load (cached fallback)."""
         return self._next_shortest_path(src, dst, free_only=False,
                                         ignore_load=True)
+
+    # ------------------------------------------------------- public API ---
+    def shortest_residual_path(self, src: str, dst: str, *,
+                               free_only: bool = False,
+                               avoid_edges=frozenset()):
+        """Shortest path on the LIVE residual bandwidth matrix:
+        ``(path, bottleneck_bw)``, or ``(None, 0.0)`` when the residual
+        graph is exhausted between the endpoints.
+
+        This is the public query the transfer engine stitches multi-hop
+        cut-through paths from (and what `benchmarks/tpu_multipath.py`
+        uses for its single-path arm) — callers never reach into the
+        memoized `_next_shortest_path` internals.
+        """
+        return self._next_shortest_path(src, dst, free_only=free_only,
+                                        avoid_edges=avoid_edges)
+
+    def striped_paths(self, src: str, dst: str, max_paths: int = 4
+                      ) -> list[tuple[tuple[str, ...], float]]:
+        """Edge-disjoint topology stripe set ``[(path, bw), ...]`` for a
+        SATURATED residual graph: up to ``max_paths`` shortest routes on
+        the raw topology, each avoiding the edges of the earlier ones.
+
+        When `select_paths` can allocate nothing (every relevant edge's
+        residual is claimed by live transfers), striping chunks across
+        several *physical* routes still wins — the link simulator's DRR
+        arbitration shares each link chunk by chunk, so an extra disjoint
+        route is extra aggregate bandwidth even at zero free capacity.
+        Stripe routes are capped at ONE hop beyond the shortest (the
+        direct NVLink plus its 2-hop parallel detours — paper Fig. 7's
+        stripe shape): a longer detour through contended links makes its
+        stripe the straggler that delays the whole transfer (completion
+        is the max over stripes).  No allocation is made.  Pure function
+        of the topology, memoized on `Topology.version`.
+        """
+        key = (src, dst, max_paths)
+        hit = self._stripe_cache.get(key)
+        if hit is not None and hit[0] == self.topo.version:
+            return hit[1]
+        out: list[tuple[tuple[str, ...], float]] = []
+        avoid: set[tuple[str, str]] = set()
+        min_hops = None
+        while len(out) < max_paths:
+            p, bw = self._next_shortest_path(
+                src, dst, free_only=False, ignore_load=True,
+                avoid_edges=frozenset(avoid))
+            if p is None:
+                break
+            if min_hops is None:
+                min_hops = len(p)
+            elif len(p) > min_hops + 1:
+                break
+            out.append((tuple(p), bw))
+            avoid.update(zip(p, p[1:]))
+        self._stripe_cache[key] = (self.topo.version, out)
+        return out
 
     def _next_shortest_path(self, src, dst, *, free_only: bool,
                             avoid_edges=frozenset(),

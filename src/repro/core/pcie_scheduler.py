@@ -40,9 +40,7 @@ from collections import deque
 from dataclasses import dataclass, field
 
 from repro.core.linksim import LinkSim
-
-FOREGROUND = "fg"
-BACKGROUND = "bg"
+from repro.core.pinned_buffer import BACKGROUND, FOREGROUND  # noqa: F401
 
 #: slo_ms at or above this is "no real SLO" (the 1e9 default used by
 #: best-effort fetches) — admitted, but excluded from miss accounting.

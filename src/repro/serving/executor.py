@@ -14,7 +14,8 @@ import itertools
 from collections import defaultdict, deque
 from dataclasses import dataclass, field
 
-from repro.core.api import FaaSTube, TubeConfig, _host_of
+from repro.core.api import FaaSTube, TubeConfig
+from repro.core.transfer import host_of
 from repro.core.topology import Topology
 from repro.serving.workflow import Workflow, isolated_compute_ms, place
 
@@ -111,7 +112,7 @@ class WorkflowEngine:
         for stage, mb in w.input_mb.items():
             did = f"r{rs.rid}:in:{stage}"
             st = meta.stage[stage]
-            host = _host_of(self._gpu_of(w, st)) if st.kind == "gpu" else "host"
+            host = host_of(self._gpu_of(w, st)) if st.kind == "gpu" else "host"
             self.tube.store(f"r{rs.rid}", did, mb, host, sim.now)
         for s in w.stages:
             if not s.deps and s.name not in w.input_mb and s.kind == "cpu":
