@@ -1,0 +1,165 @@
+"""Chaos scenario: the 16-node fleet under a seeded failure schedule.
+
+Re-runs the fleet-scale trace (64 apps x 8 requests over 16 dgx-v100
+nodes, ``benchmarks.fleet``) with a :class:`~repro.core.faults.
+FaultSchedule` armed on the tube — link deaths, bandwidth brownouts, a
+node crash, staging-host losses — and bands the data plane's recovery
+machinery against two controls:
+
+  plain     the untouched fleet run (no injector at all);
+  nofault   an EMPTY schedule armed with the full RecoveryPolicy — must
+            replay *event-identical* to ``plain`` (the fault path costs
+            zero when nothing fails);
+  chaos     the seeded schedule + retry/re-plan + lineage recovery —
+            must still complete >= 99% of workflows;
+  noretry   same schedule, recovery disarmed (``recover=False``) — the
+            contrast arm showing what the faults cost without the
+            machinery.
+
+All four arms run on the simulated clock, so completion counts, event
+counts, recovered-stage counts and p99s are deterministic; results land
+in ``BENCH_chaos.json`` and are band-gated by ``benchmarks.band_gate``
+in CI.  ``python -m benchmarks.chaos smoke`` runs a 4-node / 64-workflow
+edition inside a 30 s budget (the CI smoke gate).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from benchmarks.common import emit, lat_ms, p99
+from benchmarks.fleet import build_fleet
+from benchmarks.workloads import arrivals
+from repro.core.api import FAASTUBE
+from repro.core.faults import FaultInjector, FaultSchedule
+from repro.core.topology import cluster, dgx_v100
+from repro.core.transfer import RecoveryPolicy
+from repro.serving.executor import WorkflowEngine
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_chaos.json")
+SEED = 0
+FULL = dict(n_nodes=16, n_apps=64, reqs_per_app=8,
+            n_link=24, n_brownout=12, n_node=2, n_host=4)
+SMOKE = dict(n_nodes=4, n_apps=16, reqs_per_app=4,
+             n_link=3, n_brownout=2, n_node=1, n_host=1)
+WALL_BUDGET_S = 120.0
+SMOKE_BUDGET_S = 30.0
+MIN_COMPLETION = 0.99
+
+
+def run_arm(*, n_nodes: int, n_apps: int, reqs_per_app: int,
+            schedule: FaultSchedule | None = None,
+            recovery: RecoveryPolicy | None = None,
+            recover: bool = True, seed: int = SEED, **_):
+    """One fleet trace; returns (engine, injector, n_submitted, events)."""
+    from repro.core import linksim as L
+    topo = cluster(n_nodes, base=dgx_v100)
+    apps, placements = build_fleet(topo, n_nodes, n_apps)
+    eng = WorkflowEngine(topo, FAASTUBE, placements=placements,
+                         recover=recover)
+    inj = None
+    if schedule is not None:
+        inj = FaultInjector(eng.tube, schedule, recovery=recovery).arm()
+    n_sub = 0
+    for k, w in enumerate(apps):
+        for t in arrivals("bursty", reqs_per_app, 40.0, seed + k):
+            eng.submit_workflow(w, t)
+            n_sub += 1
+    e0 = L.TOTAL_EVENTS
+    eng.run()
+    return eng, inj, n_sub, L.TOTAL_EVENTS - e0
+
+
+def _stats(eng, n_sub: int, events: int) -> dict:
+    done = len(eng.completed)
+    return {"completed": done, "submitted": n_sub,
+            "failed": len(eng.failed),
+            "completion_pct": round(100.0 * done / n_sub, 3),
+            "p99_ms": round(p99([lat_ms(r) for r in eng.completed]), 3),
+            "recovered_stages": eng.recovered_stages,
+            "transfer_retries": eng.tube.engine.retries,
+            "transfer_failures": eng.tube.engine.failures,
+            "objects_lost": eng.tube.stats["lost"],
+            "events": events}
+
+
+def main(argv=None) -> dict:
+    args = list(argv if argv is not None else sys.argv[1:])
+    smoke = "smoke" in args
+    scale = SMOKE if smoke else FULL
+    tag = "smoke" if smoke else "full"
+    t0 = time.time()
+
+    # control arms: plain fleet vs empty-schedule-armed must be
+    # event-identical — the chaos harness costs nothing when idle
+    plain, _, n_sub, ev_plain = run_arm(**scale)
+    nofault, _, _, ev_nofault = run_arm(**scale, schedule=FaultSchedule(),
+                                        recovery=RecoveryPolicy())
+    horizon = 0.6 * max(r.t_done for r in plain.completed)
+    sched = FaultSchedule.generate(
+        cluster(scale["n_nodes"], base=dgx_v100), seed=SEED + 1,
+        horizon_ms=horizon, n_link=scale["n_link"],
+        n_brownout=scale["n_brownout"], n_node=scale["n_node"],
+        n_host=scale["n_host"])
+
+    chaos, inj, _, ev_chaos = run_arm(**scale, schedule=sched,
+                                      recovery=RecoveryPolicy())
+    noretry, _, _, _ = run_arm(**scale, schedule=sched, recover=False)
+
+    arms = {"plain": _stats(plain, n_sub, ev_plain),
+            "nofault": _stats(nofault, n_sub, ev_nofault),
+            "chaos": _stats(chaos, n_sub, ev_chaos),
+            "noretry": _stats(noretry, n_sub, 0)}
+    arms["noretry"].pop("events")        # uninteresting for the contrast
+    section = {"arms": arms, "n_workflows": n_sub,
+               "horizon_ms": round(horizon, 3),
+               "schedule": sched.by_kind(), "faults_fired": dict(inj.fired)}
+
+    # merge into any existing report so smoke regeneration (CI) updates
+    # its section in place and the band gate still diffs the full one
+    report: dict = {"schema": 1}
+    if os.path.exists(DEFAULT_OUT):
+        with open(DEFAULT_OUT) as f:
+            report.update(json.load(f))
+    report[tag] = section
+    wall = time.time() - t0
+    report["wall_s"] = round(wall, 1)
+    with open(DEFAULT_OUT, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+
+    for name in ("nofault", "chaos", "noretry"):
+        a = arms[name]
+        emit("chaos", f"{name}.completion", a["completion_pct"], "%",
+             f"{a['completed']}/{n_sub} p99={a['p99_ms']:.1f}ms")
+    emit("chaos", "chaos.recovered_stages",
+         arms["chaos"]["recovered_stages"], "stage",
+         f"retries={arms['chaos']['transfer_retries']} "
+         f"lost={arms['chaos']['objects_lost']}")
+    emit("chaos", "wall_clock", wall, "s",
+         f"budget: <{SMOKE_BUDGET_S if smoke else WALL_BUDGET_S:.0f}s "
+         f"({tag})")
+
+    # acceptance bands
+    assert ev_plain == ev_nofault, \
+        f"empty schedule not free: {ev_plain} != {ev_nofault}"
+    assert arms["nofault"]["p99_ms"] == arms["plain"]["p99_ms"], arms
+    rate = arms["chaos"]["completed"] / n_sub
+    assert rate >= MIN_COMPLETION, \
+        f"chaos completion collapsed: {arms['chaos']}"
+    assert arms["noretry"]["completed"] < arms["chaos"]["completed"], \
+        "no-retry contrast arm shows no gap: the faults are toothless"
+    assert arms["chaos"]["recovered_stages"] > 0, arms["chaos"]
+    assert sum(inj.fired[k] for k in ("link", "brownout", "node",
+                                      "host")) >= len(sched) - 2, inj.fired
+    if smoke:
+        assert wall < SMOKE_BUDGET_S, f"chaos smoke too slow: {wall:.1f}s"
+    else:
+        assert wall < WALL_BUDGET_S, f"chaos scenario too slow: {wall:.1f}s"
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ BENCHES = [
 # opt-in scenarios, runnable by name (e.g. `python -m benchmarks.run
 # fleet`): heavier than the paper figures, gated in CI instead
 EXTRAS = [
+    "chaos",        # fleet under a seeded failure schedule + recovery
     "cutthrough",   # cut-through vs store-forward staging micro
     "fleet",        # 512 concurrent workflows on a 16-node cluster
     "megafleet",    # 4096 concurrent workflows on a 64-node cluster

@@ -11,8 +11,11 @@ Public surface:
     LinkSim (linksim.py)        — discrete-event link timing model
     ElasticPool (elastic_pool.py), QueueAwareMigrator (migration.py)
     PcieScheduler (pcie_scheduler.py), CircularPinnedBuffer (pinned_buffer.py)
+    FaultSchedule / FaultInjector (faults.py)
+                                — seeded deterministic chaos harness
 """
 from repro.core.topology import Topology, make_topology
 from repro.core.pathfinder import PathFinder
 from repro.core.linksim import LinkSim
-from repro.core.transfer import TransferEngine, TransferPlan
+from repro.core.transfer import TransferEngine, TransferPlan, RecoveryPolicy
+from repro.core.faults import Fault, FaultInjector, FaultSchedule

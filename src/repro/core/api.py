@@ -55,6 +55,7 @@ from repro.core.topology import PCIE_PINNED, Topology
 from repro.core.transfer import (
     CUT_THROUGH, STORE_FORWARD, TransferEngine, host_of, is_device,
     node_of)
+from repro.errors import ObjectLost
 
 # location helpers are shared data-plane vocabulary (transfer.py);
 # legacy underscore spellings kept for callers of the old facade
@@ -144,7 +145,14 @@ class FaaSTube:
             h2g=cfg.h2g, staging=cfg.staging, sched=self.sched,
             migrator=self.migrator, bg_migration=cfg.bg_migration)
         self.stats = {"h2g_ms": 0.0, "g2g_ms": 0.0, "alloc_ms": 0.0,
-                      "migrations": 0, "reloads": 0}
+                      "migrations": 0, "reloads": 0, "lost": 0}
+        # fault model (core/faults.py drives these): crashed cluster
+        # nodes, and callbacks cb(node, t) notified after a crash's
+        # surviving topology is in place but BEFORE the node's stored
+        # objects are invalidated — so the executor can remap placements
+        # before lost-object errors start firing
+        self.dead_nodes: set[str] = set()
+        self.crash_listeners: list = []
         # pool="none" baselines have no block pool, but resident bytes per
         # device are still finite: tracked here so INFless+/DeepPlan+ hit
         # the same store_cap_mb pressure path (with LRU victims)
@@ -306,9 +314,20 @@ class FaaSTube:
 
         def landed(sim, tr=None):
             self._spill_complete(v, device, sim.now)
+
+        def lost(sim, err):
+            # g2h failed terminally: the device copy never left — it
+            # stays authoritative.  Re-run victim selection; whatever
+            # allocation forced this spill still needs the room.
+            if self.items.get(device, {}).get(v.data_id) is not v \
+                    or v.state != SPILLING:
+                return
+            v.set_state(DEVICE)
+            v.host = ""
+            self._make_room(device, sim.now)
         plan = self.engine.compile("spill", v.func or "migrate", device,
                                    v.host, v.size_mb, cls=BACKGROUND)
-        self.engine.submit(plan, now, on_done=landed)
+        self.engine.submit(plan, now, on_done=landed, on_fail=lost)
 
     def _spill_complete(self, v: StoredItem, device: str, t: float):
         """SPILLING -> HOST: free the HBM blocks and flip the index
@@ -324,7 +343,7 @@ class FaaSTube:
         self._drain_pending(device, t)
 
     def _demand_reload(self, func: str, item: StoredItem, rec, dst: str,
-                       t0: float, done):
+                       t0: float, done, fail=None):
         """HOST -> RELOADING -> DEVICE: reload from the host the item
         spilled to (inter-node when the consumer sits on another node),
         paying destination allocation + PCIe h2g.  The index flips back
@@ -346,6 +365,21 @@ class FaaSTube:
                 if self.sched:
                     self.sched.complete(func)
                 return
+            if node_of(dst) in self.dead_nodes:
+                # destination crashed while the reload waited for room:
+                # the host copy is untouched — put the item back and
+                # fail over this fetch (and any parked on it)
+                self._unalloc(dst, buf, item.size_mb, t)
+                item.held = ""
+                err = ObjectLost(item.data_id, node_of(dst),
+                                 "destination node crashed")
+                item.set_state(HOST)
+                self._fail_waiters(item, err)
+                if fail is not None:
+                    fail(self.sim, err)      # releases the admission
+                elif self.sched:
+                    self.sched.complete(func)
+                return
             self.stats["alloc_ms"] += cost
             item.held = dst
             if buf >= 0:
@@ -354,11 +388,18 @@ class FaaSTube:
             def landed(sim, tr=None):
                 self._reload_complete(item, rec, dst, sim)
                 done(sim)
+
+            def lost(sim, err):
+                self._reload_failed(item, rec, home, err,
+                                    redispatch=False)
+                if fail is not None:
+                    fail(sim, err)
             # the reload blocks a foreground fetch, so it rides that
             # fetch's own foreground admission (not the migration class)
             plan = self.engine.compile("reload", func, src_host, dst,
                                        rec.size_mb)
-            self.engine.submit(plan, t + cost, on_done=landed)
+            self.engine.submit(plan, t + cost, on_done=landed,
+                               on_fail=lost if fail is not None else None)
 
         self._reserve(dst, item.func or func, rec.size_mb, t0, grant)
 
@@ -383,6 +424,146 @@ class FaaSTube:
         for w in waiters:
             w(sim, sim.now)
         self._drain_pending(dst, sim.now)
+
+    # --------------------------------------------------------------- faults -
+    # Failure transitions of the location state machine (fault model):
+    #
+    #   SPILLING  --g2h failed-->  DEVICE   (the HBM copy never left; it
+    #                                        stays authoritative)
+    #   RELOADING --h2g failed-->  HOST     (source copy intact: parked
+    #                                        fetches fail over, the item
+    #                                        stays fetchable)
+    #   RELOADING --source lost--> gone     (ObjectLost to every waiter)
+    #   any state --node crash -->  gone    (store invalidated wholesale)
+    #
+    # All of them run on *terminal* transfer failure — the engine's retry
+    # ladder has already re-planned around the fault before these fire.
+
+    def _fail_waiters(self, item: StoredItem, err):
+        """Fail over every fetch parked on the item with a structured
+        cause (waiter signature: ``w(sim, t, err=None)``)."""
+        waiters, item.waiters = item.waiters, []
+        for w in waiters:
+            w(self.sim, self.sim.now, err)
+
+    def _lose_item(self, home: str, item: StoredItem, cause: str):
+        """Drop an intermediate whose only copy is gone: release any
+        held memory, retract the index record, fail parked fetches."""
+        rec = self.index.global_table.get(item.data_id)
+        self._release_item(item, rec, self.sim.now)
+        self.items.get(home, {}).pop(item.data_id, None)
+        if self._home.get(item.data_id) == home:
+            self._home.pop(item.data_id, None)
+        self.index.drop(item.data_id)
+        self.stats["lost"] += 1
+        self._fail_waiters(item, ObjectLost(item.data_id, node_of(home),
+                                            cause))
+
+    def _reload_failed(self, item: StoredItem, rec, home: str, err, *,
+                       redispatch: bool):
+        """RELOADING failure transition: release the destination buffer;
+        source copy intact -> back to HOST (parked fetches re-dispatched
+        for background prefetches, failed over for demand reloads — a
+        re-dispatch there could ping-pong against a persistent fault);
+        source gone -> ObjectLost."""
+        self._release_item(item, rec, self.sim.now)
+        src_ok = item.host and node_of(item.host) not in self.dead_nodes
+        if not src_ok:
+            self._lose_item(home, item, "reload source lost")
+            return
+        item.set_state(HOST)
+        if redispatch:
+            waiters, item.waiters = item.waiters, []
+            for w in waiters:
+                w(self.sim, self.sim.now)
+        else:
+            self._fail_waiters(item, err)
+
+    def fail_link(self, a: str, b: str, cause: str = ""):
+        """Permanently fail the physical link a-b.
+
+        Order matters: the simulator truncates in-flight service FIRST
+        (the committed prefix is priced at the bandwidth it actually ran
+        at), then the pathfinder removes the edge so every re-plan routes
+        around it."""
+        self.sim.kill_link(a, b, cause or f"link {a}-{b}")
+        self.pf.fail_link(a, b)
+
+    def brownout(self, a: str, b: str, factor: float,
+                 duration_ms: float = 0.0):
+        """Degrade link a-b to ``factor`` of its bandwidth, restoring
+        after ``duration_ms`` (0 = permanent).  In-flight service is cut
+        at the old rate and re-dispatched at the new one."""
+        old = self.topo.bw(a, b)
+        if old <= 0.0:
+            return                      # edge already dead: nothing to do
+        new = old * factor
+        self.sim.retime_link(a, b, new)
+        self.pf.retime_link(a, b, new - old)
+        if duration_ms > 0.0:
+            def restore(sim):
+                cur = self.topo.bw(a, b)
+                if cur <= 0.0:          # killed while browned out
+                    return
+                self.sim.retime_link(a, b, old)
+                self.pf.retime_link(a, b, old - cur)
+            self.sim.call_at(self.sim.now + duration_ms, restore)
+
+    def crash_node(self, node: str):
+        """Crash cluster node ``node`` ("n3"): sever every link touching
+        it (in-flight transfers fail at the failure epoch and re-plan or
+        surface), notify crash listeners (the executor remaps placements
+        while the index is still coherent), then invalidate every object
+        stored on the node — parked fetches fail over with ObjectLost."""
+        if node in self.dead_nodes:
+            return
+        self.dead_nodes.add(node)
+        pre = node + ":"
+        t = self.sim.now
+        pairs = sorted({tuple(sorted(e)) for e in self.topo.edges
+                        if e[0].startswith(pre) or e[1].startswith(pre)})
+        for a, b in pairs:
+            self.sim.kill_link(a, b, f"node {node} crashed")
+            self.pf.fail_link(a, b)
+        for cb in list(self.crash_listeners):
+            cb(node, t)
+        for dev in sorted(d for d in self.items if d.startswith(pre)):
+            for item in list(self.items[dev].values()):
+                if item.state == RELOADING and item.held \
+                        and not item.held.startswith(pre):
+                    # reload already in flight toward a SURVIVING device:
+                    # the severed source link fails that transfer, and
+                    # the reload failure path decides the item's fate
+                    continue
+                self._lose_item(dev, item, f"node {node} crashed")
+            # deferred allocations on the dead device: fire each grant —
+            # the closures self-detect the vanished item / dead node and
+            # release whatever admission or memory they were holding
+            for _size, _func, grant in self._pending.pop(dev, ()):
+                grant(t, -1, 0.0)
+            self.pools.pop(dev, None)
+            self.resident.pop(dev, None)
+
+    def lose_host(self, host: str):
+        """Lose a staging host's memory (pinned ring contents + spilled
+        store) without taking its node down.  In-flight transfers staged
+        through the host fail (and re-plan — the ring itself recovers);
+        HOST-state items that spilled there are gone for good."""
+        # snapshot first: failing a staged transfer can re-plan and
+        # insert its replacement into sim.transfers mid-iteration
+        staged = [tid for tid, tr in self.sim.transfers.items()
+                  if tr.t_done < 0 and not tr.failed
+                  and tr.stage is not None and tr.stage_key == host]
+        for tid in staged:
+            self.sim.fail_transfer(tid, f"host {host} lost")
+        for dev in sorted(self.items):
+            for item in list(self.items[dev].values()):
+                if item.state == HOST and item.host == host:
+                    self._lose_item(dev, item, f"host {host} lost")
+                elif dev == host and item.state == DEVICE:
+                    # stored directly in the host's memory (workflow
+                    # inputs): contents lost with the host
+                    self._lose_item(dev, item, f"host {host} lost")
 
     # --------------------------------------------------------------- store -
     def store(self, func: str, data_id: str, size_mb: float, device: str,
@@ -459,9 +640,29 @@ class FaaSTube:
         return "h2g"
 
     def fetch(self, func: str, data_id: str, dst: str, now: float, *,
-              slo_ms: float = 1e9, infer_ms: float = 0.0, on_ready=None):
-        """Fetch data_id into dst's address space; on_ready(sim, t) called."""
-        rec, lk = self.index.lookup(node_of(dst), data_id)
+              slo_ms: float = 1e9, infer_ms: float = 0.0, on_ready=None,
+              on_error=None):
+        """Fetch data_id into dst's address space; on_ready(sim, t) called.
+
+        ``on_error(sim, err)`` fires instead when the fetch fails
+        terminally: the id is not (or no longer) in the index, the data
+        was lost to a node crash, or the transfer exhausted the engine's
+        retry ladder.  Without an ``on_error`` an unknown id raises, as
+        it always did."""
+        if node_of(dst) in self.dead_nodes:
+            if on_error is not None:
+                err = ObjectLost(data_id, node_of(dst),
+                                 "destination node crashed")
+                self.sim.call_at(now, lambda sim: on_error(sim, err))
+            return
+        try:
+            rec, lk = self.index.lookup(node_of(dst), data_id)
+        except KeyError:
+            if on_error is None:
+                raise
+            err = ObjectLost(data_id, "", "not in index")
+            self.sim.call_at(now, lambda sim: on_error(sim, err))
+            return
         if not self.cfg.unified_index:
             lk += 0.1                     # per-op RPC instead of local pipe
         t0 = now + lk
@@ -471,10 +672,17 @@ class FaaSTube:
         if item is not None and item.state == RELOADING:
             # an h2g reload is already in flight: park this fetch; it is
             # re-dispatched (paying its own move from the landed copy)
-            # when the reload completes
-            item.waiters.append(lambda sim, t: self.fetch(
-                func, data_id, dst, t, slo_ms=slo_ms, infer_ms=infer_ms,
-                on_ready=on_ready))
+            # when the reload completes, or failed over when the reload
+            # fails and the item is unrecoverable
+            def parked(sim, t, err=None):
+                if err is not None:
+                    if on_error is not None:
+                        on_error(sim, err)
+                    return
+                self.fetch(func, data_id, dst, t, slo_ms=slo_ms,
+                           infer_ms=infer_ms, on_ready=on_ready,
+                           on_error=on_error)
+            item.waiters.append(parked)
             return
         # HOST only: a SPILLING item's device copy is still valid — a
         # racing fetch coherently reads it through the normal paths below
@@ -504,18 +712,29 @@ class FaaSTube:
             if on_ready:
                 on_ready(sim, sim.now)
 
+        def failed(sim, err):
+            # a failed fetch is not an SLO sample: release the admission
+            # without a completion timestamp, then surface the cause
+            if self.sched:
+                self.sched.complete(func)
+            if on_error is not None:
+                on_error(sim, err)
+
         if kind == "reload":
-            self._demand_reload(func, item, rec, dst, t0, done)
+            self._demand_reload(func, item, rec, dst, t0, done, failed)
             return
         a, b = src, dst
         if kind == "h2g" and not src:
             a = host_of(dst)
         plan = self.engine.compile(kind, func, a, b, rec.size_mb,
                                    slo_ms=slo_ms, infer_ms=infer_ms)
-        self.engine.submit(plan, t0, on_done=done)
+        self.engine.submit(plan, t0, on_done=done,
+                           on_fail=failed if on_error is not None
+                           else None)
 
     def put(self, func: str, src_dev: str, size_mb: float, now: float, *,
-            slo_ms: float = 1e9, infer_ms: float = 0.0, on_done=None):
+            slo_ms: float = 1e9, infer_ms: float = 0.0, on_done=None,
+            on_error=None):
         """Return an output to the host (g2h), SLO-admitted like a fetch.
 
         Executor return copies used to bypass admission entirely and
@@ -530,10 +749,18 @@ class FaaSTube:
                 self.sched.complete(func, t=sim.now)
             if on_done is not None:
                 on_done(sim, tr)
+
+        def failed(sim, err):
+            if self.sched:
+                self.sched.complete(func)
+            if on_error is not None:
+                on_error(sim, err)
         plan = self.engine.compile("g2h", func, src_dev,
                                    host_of(src_dev), size_mb,
                                    slo_ms=slo_ms, infer_ms=infer_ms)
-        return self.engine.submit(plan, now, on_done=done)
+        return self.engine.submit(plan, now, on_done=done,
+                                  on_fail=failed if on_error is not None
+                                  else None)
 
     # ------------------------------------------------------------ consume -
     def consume(self, data_id: str, device: str, now: float):
@@ -579,7 +806,14 @@ class FaaSTube:
 
         def back(sim, tr=None, p=p):
             self._reload_complete(p, prec, device, sim)
+
+        def lost(sim, err, p=p):
+            # background prefetch failed terminally: fall back to HOST
+            # (the spilled copy is intact unless its node died) and
+            # re-dispatch parked fetches — each pays its own demand
+            # reload from the surviving copy
+            self._reload_failed(p, prec, device, err, redispatch=True)
         plan = self.engine.compile("prefetch", p.func or "prefetch",
                                    src_host, device, p.size_mb,
                                    cls=BACKGROUND)
-        self.engine.submit(plan, now + cost, on_done=back)
+        self.engine.submit(plan, now + cost, on_done=back, on_fail=lost)

@@ -18,18 +18,11 @@ from collections import defaultdict, deque
 from dataclasses import dataclass, field
 
 from repro.core.linksim import alloc_ms
+# moved to the shared taxonomy (repro.errors); re-exported here for
+# existing imports
+from repro.errors import PoolCapacityError  # noqa: F401
 
 BLOCK_MB = 2.0
-
-
-class PoolCapacityError(RuntimeError):
-    """An allocation would push used blocks past ``capacity_mb``.
-
-    Raised instead of silently over-committing: the caller (the FaaSTube
-    store facade) must spill victims and retry once their g2h copies
-    complete.  ``alloc(..., force=True)`` bypasses the check for single
-    items larger than the whole store, where no victim can ever help.
-    """
 
 
 def blocks_for(size_mb: float) -> int:
@@ -127,7 +120,8 @@ class ElasticPool:
             raise PoolCapacityError(
                 f"{self.device}: alloc {size_mb:.0f} MB would exceed "
                 f"capacity {self.capacity_mb:.0f} MB "
-                f"(used {self.used_mb:.0f} MB)")
+                f"(used {self.used_mb:.0f} MB)",
+                device=self.device, need_mb=size_mb, cause="capacity")
         st = self.stats[func]
         st.arrivals.append(now)
         st.sizes.append(size_mb)

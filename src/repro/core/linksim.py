@@ -162,6 +162,8 @@ class Transfer:
     stage_mb: float = 0.0         # ..occupancy window, released on finish
     stage_cls: str = FOREGROUND   # ring-occupancy class (fg | bg)
     stage_key: str = "host"       # which host's ring (rings are per host)
+    failed: str = ""              # non-empty: failure cause (fault model)
+    parked: bool = False          # launch parked on a full staging ring
 
 
 class _Burst:
@@ -431,6 +433,16 @@ class LinkSim:
         self._pending_clear: set[str] = set()    # clear_func awaiting drain
         self._bw_cache: dict[tuple, tuple] = {}
         self._bw_version = -1
+        # ---- fault model (core/faults.py) -------------------------------
+        # `_chaos` arms the failure checks; until the first kill_link /
+        # fail_transfer / retime_link call it stays False and every
+        # fault guard below short-circuits on one attribute read — the
+        # no-fault event stream is byte-identical to the pre-fault
+        # engine (pinned by tests/test_transfer_equiv.py).
+        self._chaos = False
+        self._dead_links: set[tuple] = set()     # both directions of
+        self._freeze: set[tuple] = set()         # ..each killed edge
+
 
     # ------------------------------------------------------------ submit --
     @staticmethod
@@ -593,6 +605,144 @@ class LinkSim:
         """Schedule an arbitrary callback(sim) at time t."""
         heappush(self._events, (t, next(self._seq), "call", fn))
 
+    # ------------------------------------------------------------- faults --
+    def _cut_active(self, link):
+        """Truncate whatever service is running on `link` at the current
+        chunk boundary (committed prefix kept, remainder requeued)."""
+        svc = self._active.get(link)
+        if svc is None:
+            return
+        if type(svc) is _Round:
+            self._trunc_round(svc, self._keep_round(svc))
+        else:
+            self._truncate(svc, self._keep_count(svc))
+
+    def kill_link(self, a: str, b: str, cause: str = ""):
+        """Fail the edge a-b at the current instant.
+
+        In-flight coalesced service is truncated at the failure epoch
+        (the chunk on the wire completes; nothing after it does), every
+        transfer with chunks queued on the edge is failed with a
+        structured cause, and future arrivals onto the edge fail their
+        transfer on contact.  Call BEFORE removing the edge from the
+        topology (PathFinder.fail_link): truncation replay prices the
+        committed prefix at the bandwidth it actually ran at.
+        """
+        self._chaos = True
+        links = ((a, b), (b, a))
+        self._dead_links.update(links)
+        self._freeze.update(links)
+        victims: dict[int, None] = {}
+        try:
+            for link in links:
+                self._cut_active(link)
+                q = self._queues.get(link)
+                if q:
+                    for dq in q.values():
+                        for bb in dq:
+                            if bb.taken < bb.n:
+                                victims[bb.tid] = None
+        finally:
+            self._freeze.difference_update(links)
+        cause = cause or f"link {a}-{b}"
+        for tid in victims:
+            self.fail_transfer(tid, cause)
+
+    def retime_link(self, a: str, b: str, bw: float):
+        """Change the edge's bandwidth mid-flight (brownout/restore).
+
+        Active services are cut at the current chunk boundary at the OLD
+        bandwidth (the committed prefix physically ran at it), then the
+        topology edge is rescaled and the remainder re-dispatches at the
+        new rate from the next boundary on.
+        """
+        self._chaos = True
+        links = ((a, b), (b, a))
+        self._freeze.update(links)
+        try:
+            for link in links:
+                self._cut_active(link)
+            self.topo.set_bw(a, b, bw)      # invalidates the bw cache
+        finally:
+            self._freeze.difference_update(links)
+        for link in links:
+            if link not in self._active:
+                self._dispatch(link)
+
+    def fail_transfer(self, tid: int, cause: str = "failed"):
+        """Fail one in-flight transfer: truncate every service carrying
+        its chunks at the committed boundary, purge its queued bursts,
+        and surface a failed completion (``tr.failed`` set, ``on_done``
+        fired, staging window released, NO delivered-MB credit) once the
+        last committed chunk lands.  Idempotent; no-op on transfers that
+        already completed."""
+        tr = self.transfers.get(tid)
+        if tr is None or tr.t_done >= 0 or tr.failed:
+            return
+        self._chaos = True
+        tr.failed = cause
+        t_fire = self.now
+        for link in tuple(self._func_links.get(tr.func, ())):
+            svc = self._active.get(link)
+            if svc is not None:
+                if type(svc) is _Round:
+                    if any(p.burst.tid == tid for p in svc.parts):
+                        self._trunc_round(svc, self._keep_round(svc))
+                elif svc.burst.tid == tid:
+                    self._truncate(svc, self._keep_count(svc))
+            svc = self._active.get(link)     # truncation may replace it
+            if svc is not None:
+                involved = (any(p.burst.tid == tid for p in svc.parts)
+                            if type(svc) is _Round
+                            else svc.burst.tid == tid)
+                if involved and svc.end > t_fire:
+                    t_fire = svc.end         # last committed chunk lands
+            self._purge_failed(link)
+        if tr.parked:
+            return    # completes at the staging-ring grant (_launch)
+        if t_fire <= self.now:
+            self._finish_failed(tr)
+        else:
+            self.call_at(t_fire, lambda sim, tr=tr: sim._finish_failed(tr))
+
+    def _purge_failed(self, link):
+        """Drop queued bursts of failed transfers from one link's
+        scheduling state.  Re-run after every truncation while the fault
+        model is armed: a snapshot restore re-merges member bursts into
+        the queue, which would otherwise resurrect purged chunks."""
+        q = self._queues.get(link)
+        transfers = self.transfers
+        if q:
+            for f in list(q):
+                dq = q[f]
+                live = [bb for bb in dq if not transfers[bb.tid].failed]
+                if len(live) == len(dq):
+                    continue
+                if live:
+                    q[f] = deque(live)
+                    continue
+                del q[f]
+                for rings in (self._rr, self._rrb):
+                    rr = rings.get(link)
+                    if rr is not None and f in rr:
+                        rr.remove(f)
+            if not q:
+                self._queues.pop(link, None)
+        fifo = self._fifo.get(link)
+        if fifo:
+            live = [bb for bb in fifo if not transfers[bb.tid].failed]
+            if len(live) != len(fifo):
+                self._fifo[link] = deque(live)
+
+    def _finish_failed(self, tr):
+        """Failed-completion path: identical bookkeeping to success
+        (stage release, func-state drain, ``on_done`` — callers read
+        ``tr.failed`` to route the error) minus the delivered-MB
+        credit."""
+        if tr.t_done >= 0:
+            return
+        self._finish_transfer(tr)
+
     def submit(self, func: str, paths, size_mb: float, *,
                t: float | None = None, pin_fresh_mb: float = 0.0,
                alloc_fresh_mb: float = 0.0, ipc_handles: int = 0,
@@ -664,12 +814,19 @@ class LinkSim:
                                  max(t_grant, tr.t_submit)
                                  + tr.extra_latency),
                     stage_cls, stage_key):
+                tr.parked = True
                 return tid
         self._launch(tr, real, last_mb, start)
         return tid
 
     def _launch(self, tr: Transfer, real, last_mb: float, start: float):
         """Schedule the per-path chunk arrival events of a transfer."""
+        tr.parked = False
+        if tr.failed:
+            # failed while parked on a full staging ring: the grant just
+            # reserved the window — complete as failed now, releasing it
+            self._finish_failed(tr)
+            return
         trig = TRIGGER_MS / BATCH_CHUNKS
         for pi, (path, n, ci0) in enumerate(real):
             # batched triggering: chunk ci launches at start + (ci//B)*trig.
@@ -1015,6 +1172,9 @@ class LinkSim:
     # ---------------------------------------------------------- dispatch --
     def _dispatch(self, link):
         if link in self._active:
+            return
+        if self._chaos and (link in self._dead_links
+                            or link in self._freeze):
             return
         q = self._queues.get(link)
         if not q:
@@ -1442,6 +1602,10 @@ class LinkSim:
             self._trim_downstream(d, k)
             if np is not None:
                 np.downstream = d      # future cuts cascade again
+        if self._chaos:
+            # the restore above re-merged member bursts into the queue;
+            # failed transfers' remainders must not be re-served
+            self._purge_failed(link)
         if keep == 0:
             self._dispatch(link)
 
@@ -1548,7 +1712,9 @@ class LinkSim:
         d = svc.downstream
         if d is not None:
             self._trim_downstream(d, keep)
-        if keep == 0:
+        if self._chaos:
+            self._purge_failed(link)  # a requeued failed burst must not
+        if keep == 0:                 # ..be re-served
             self._dispatch(link)      # link freed mid-gap: serve the queue
 
     def _replay_deficit(self, link, func, k):
@@ -1596,7 +1762,7 @@ class LinkSim:
                 if b.hop + 2 >= len(b.path):
                     tr = self.transfers[b.tid]
                     tr.chunks_done += part.count
-                    if tr.chunks_done >= tr.n_chunks:
+                    if tr.chunks_done >= tr.n_chunks and not tr.failed:
                         self._finish_transfer(tr)
             self._dispatch(link)
             return
@@ -1606,7 +1772,7 @@ class LinkSim:
         if b.hop + 2 >= len(b.path):
             tr = self.transfers[b.tid]
             tr.chunks_done += svc.count
-            if tr.chunks_done >= tr.n_chunks:
+            if tr.chunks_done >= tr.n_chunks and not tr.failed:
                 self._finish_transfer(tr)
         self._dispatch(link)
 
@@ -1618,9 +1784,11 @@ class LinkSim:
                              tr.stage_key)
             tr.stage = None
         # per-class delivered bytes (before on_done, which may evict the
-        # function's class registration via the scheduler)
-        cls = "bg" if tr.func in self._cls_bg else "fg"
-        self.mb_by_class[cls] += tr.size_mb
+        # function's class registration via the scheduler); a failed
+        # transfer delivered only a prefix — no credit
+        if not tr.failed:
+            cls = "bg" if tr.func in self._cls_bg else "fg"
+            self.mb_by_class[cls] += tr.size_mb
         left = self._func_tr.get(tr.func, 1) - 1
         self._func_tr[tr.func] = left
         if tr.on_done is not None:
@@ -1645,6 +1813,15 @@ class LinkSim:
         if kind == "done":
             self._complete_service(t, payload[0], payload[1])
         elif kind == "arrive":
+            if self._chaos:
+                link = (payload.path[payload.hop],
+                        payload.path[payload.hop + 1])
+                if self.transfers[payload.tid].failed:
+                    return True          # stranded chunks of a failure
+                if link in self._dead_links:
+                    self.fail_transfer(
+                        payload.tid, f"link {link[0]}-{link[1]}")
+                    return True
             payload.seq = self._arr_hi = next(self._arr_seq)
             link = (payload.path[payload.hop], payload.path[payload.hop + 1])
             self._enqueue(link, payload)

@@ -462,6 +462,17 @@ class PathFinder:
             self._release_alloc(func, alloc)
         self.allocs.pop(func, None)
 
+    def retime_link(self, a: str, b: str, delta: float):
+        """Bandwidth brownout/restore: shift the residual capacity of a
+        live edge by ``delta`` (the topology edge itself is rescaled by
+        ``Topology.set_bw`` via the link simulator).  Clamped at zero —
+        an edge allocated beyond its browned-out capacity simply has no
+        residual until its flows complete."""
+        for e in ((a, b), (b, a)):
+            if e in self.residual:
+                self.residual[e] = max(0.0, self.residual[e] + delta)
+        self._touch_scopes((a, b))
+
     def fail_link(self, a: str, b: str):
         """Fault tolerance: remove a dead link from the graph.
 

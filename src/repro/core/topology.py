@@ -52,6 +52,18 @@ class Topology:
         if hit:
             self.version += 1
 
+    def set_bw(self, a: str, b: str, bw: float):
+        """Rescale an existing edge in place (bandwidth brownouts).
+        Symmetric, no-op on absent edges; bumps `version` so the LinkSim
+        bandwidth cache and PathFinder routes invalidate."""
+        hit = False
+        for k in ((a, b), (b, a)):
+            if k in self.edges:
+                self.edges[k] = bw
+                hit = True
+        if hit:
+            self.version += 1
+
     def bw(self, a: str, b: str) -> float:
         return self.edges.get((a, b), 0.0)
 

@@ -20,16 +20,13 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+# the exception classes moved to the shared taxonomy (repro.errors) so
+# the tube's fault injector and the training runner raise the same
+# types; re-exported here for existing imports
+from repro.errors import NodeFailure, StragglerTimeout
 
-class NodeFailure(RuntimeError):
-    """Raised by the failure detector (or injector) when a host dies."""
-    def __init__(self, host_id: int):
-        super().__init__(f"host {host_id} failed")
-        self.host_id = host_id
-
-
-class StragglerTimeout(RuntimeError):
-    pass
+__all__ = ["NodeFailure", "StragglerTimeout", "FaultPolicy", "FaultStats",
+           "run_with_recovery"]
 
 
 @dataclass

@@ -7,6 +7,22 @@ temporally shared (one running function at a time, FIFO queue); data-
 passing overlaps other requests' compute — exactly the paper's execution
 model.  Latency split (h2g / g2g / compute) is tracked per request for the
 Fig. 3 / Fig. 12 breakdowns.
+
+Lineage recovery (fault model)
+------------------------------
+The executor registers a crash listener with the tube.  On a node crash
+it remaps dead GPUs onto sorted survivors (deterministically) and moves
+their queues; invocations running on the dead node are re-triggered on
+the remapped GPU.  A fetch that fails terminally (ObjectLost /
+TransferFailed after the engine's retry ladder) walks the request's
+lineage: workflow INPUTS are simply re-published (they come from outside
+the tube), a lost INTERMEDIATE resets its producer stage and re-executes
+it — recursively, because the producer's own consumed inputs surface as
+further fetch errors.  Re-triggering is idempotent (``started_stages``
+gates enqueueing) and budget-capped per stage; an unrecoverable request
+is marked failed and its GPU slot released so the fleet keeps serving.
+With ``recover=False`` (the no-retry contrast arm) any terminal error
+fails the request immediately.
 """
 from __future__ import annotations
 
@@ -34,6 +50,8 @@ class RequestState:
     g2g_ms: float = 0.0
     compute_ms: float = 0.0
     slo_ms: float = 1e9
+    failed: bool = False
+    recoveries: dict = field(default_factory=dict)   # stage -> retries
 
 
 class _WorkflowMeta:
@@ -60,9 +78,13 @@ class _WorkflowMeta:
         self.sinks = [t for t in w.stages if not self.consumers[t.name]]
 
 
+STAGE_RECOVERY_BUDGET = 5     # re-executions per (request, stage)
+
+
 class WorkflowEngine:
     def __init__(self, topo: Topology, cfg: TubeConfig,
-                 placements: dict[str, dict] | None = None):
+                 placements: dict[str, dict] | None = None, *,
+                 recover: bool = True):
         self.tube = FaaSTube(topo, cfg)
         self.topo = topo
         self.cfg = cfg
@@ -72,7 +94,15 @@ class WorkflowEngine:
         self.requests: dict[int, RequestState] = {}
         self._rid = itertools.count()
         self.completed: list[RequestState] = []
+        self.failed: list[RequestState] = []
         self._meta: dict[int, tuple] = {}   # id(w) -> (_WorkflowMeta, w)
+        # lineage recovery (module docstring): dead GPUs remap onto
+        # survivors; recover=False is the no-retry contrast arm
+        self.recover = recover
+        self.dead_gpus: set[str] = set()
+        self._remap: dict[str, str] = {}
+        self.recovered_stages = 0
+        self.tube.crash_listeners.append(self._on_node_crash)
 
     def _wmeta(self, w: Workflow) -> _WorkflowMeta:
         # keyed by id(w) WITH a strong reference to w in the value: if the
@@ -123,7 +153,104 @@ class WorkflowEngine:
                 self._try_stage(w, rs, s)
 
     def _gpu_of(self, w: Workflow, stage) -> str:
-        return self.placements[w.name][stage.name]
+        g = self.placements[w.name][stage.name]
+        return self._remap.get(g, g)
+
+    # ------------------------------------------------------- fault model --
+    def _on_node_crash(self, node: str, t: float):
+        """Crash listener (fires before the tube invalidates the node's
+        objects): remap dead GPUs deterministically onto sorted
+        survivors, move their queues, and resume draining."""
+        pre = node + ":"
+        dead = sorted(g for g in self.topo.gpus
+                      if g.startswith(pre) and g not in self.dead_gpus)
+        if not dead:
+            return
+        self.dead_gpus.update(dead)
+        survivors = sorted(g for g in self.topo.gpus
+                           if g not in self.dead_gpus)
+        if not survivors:
+            return
+        for i, g in enumerate(dead):
+            self._remap[g] = survivors[i % len(survivors)]
+        for k, v in list(self._remap.items()):
+            while v in self.dead_gpus:          # chase earlier remaps
+                v = self._remap[v]
+            self._remap[k] = v
+        for g in dead:
+            self.gpu_busy.pop(g, None)
+            for item in self.gpu_queue.pop(g, ()):
+                self.gpu_queue[self._remap[g]].append(item)
+        for g in sorted({self._remap[g] for g in dead}):
+            self._drain(g)
+
+    def _budget_ok(self, rs: RequestState, s) -> bool:
+        """Charge one recovery of stage s against the request's budget."""
+        if not self.recover or rs.failed or rs.t_done >= 0:
+            return False
+        n = rs.recoveries.get(s.name, 0)
+        if n >= STAGE_RECOVERY_BUDGET:
+            return False
+        rs.recoveries[s.name] = n + 1
+        return True
+
+    def _fail_request(self, rs: RequestState):
+        if rs.failed or rs.t_done >= 0:
+            return
+        rs.failed = True
+        self.failed.append(rs)
+
+    def _fetch_failed(self, w: Workflow, rs: RequestState, s, did: str,
+                      err, held: str):
+        """Terminal input-fetch failure for stage s.  Release the GPU
+        slot the invocation holds (a parked stage must not deadlock its
+        GPU), then walk the lineage."""
+        if held and held not in self.dead_gpus and self.gpu_busy.get(held):
+            self.gpu_busy[held] = False
+            self._drain(held)
+        if not self._budget_ok(rs, s):
+            self._fail_request(rs)
+            return
+        rs.started_stages.discard(s.name)
+        rs.fetched_stages.discard(s.name)
+        self._recover(w, rs, s, did)
+
+    def _recover(self, w: Workflow, rs: RequestState, s, did: str):
+        """Lineage recovery for one lost data id feeding stage s.
+
+        Inputs are re-published (they originate outside the tube); an
+        intermediate still in the index means the TRANSFER failed, not
+        the data — plain retry; otherwise the producer stage is reset
+        and re-executed.  Stage s itself re-triggers through the normal
+        ``stored`` -> downstream machinery once the producer's output
+        store completes."""
+        sim = self.tube.sim
+        meta = self._wmeta(w)
+        rid = rs.rid
+        if did.startswith(f"r{rid}:in:"):
+            stage = did.split(":", 2)[2]
+            st = meta.stage[stage]
+            host = host_of(self._gpu_of(w, st)) if st.kind == "gpu" \
+                else "host"
+            self.tube.store(f"r{rid}", did, w.input_mb[stage], host,
+                            sim.now)
+            self._try_stage(w, rs, s)
+            return
+        if did in self.tube.index.global_table:
+            self._try_stage(w, rs, s)            # data intact: plain retry
+            return
+        prod = did[len(f"r{rid}:"):]
+        p = meta.stage.get(prod)
+        if p is None:
+            self._fail_request(rs)
+            return
+        if prod in rs.started_stages and prod not in rs.done_stages:
+            return     # re-execution already in flight; stored() re-triggers
+        self.recovered_stages += 1
+        for coll in (rs.done_stages, rs.started_stages,
+                     rs.stored_stages, rs.fetched_stages):
+            coll.discard(prod)
+        self._try_stage(w, rs, p)
 
     def _try_stage(self, w: Workflow, rs: RequestState, s):
         """Enqueue stage s on its GPU's request queue (temporal sharing).
@@ -164,11 +291,23 @@ class WorkflowEngine:
             self._consume_fetched(w, rs, s)
 
             def finished(sim2):
+                if gpu in self.dead_gpus:
+                    # crashed mid-compute: the invocation died with the
+                    # node.  Re-trigger on the remapped GPU — its
+                    # consumed inputs surface as fetch errors and walk
+                    # the lineage recovery.
+                    if self._budget_ok(rs, s):
+                        rs.started_stages.discard(s.name)
+                        rs.fetched_stages.discard(s.name)
+                        self._try_stage(w, rs, s)
+                    else:
+                        self._fail_request(rs)
+                    return
                 self.gpu_busy[gpu] = False
                 self._finish_stage(w, rs, s)
                 self._drain(gpu)
             sim.call_at(sim.now + s.compute_ms, finished)
-        self._fetch_then(w, rs, s, compute)
+        self._fetch_then(w, rs, s, compute, held=gpu)
 
     def _consume_fetched(self, w: Workflow, rs: RequestState, s):
         sim = self.tube.sim
@@ -183,8 +322,13 @@ class WorkflowEngine:
                     self.tube.consume(did, self._gpu_of(w, dep_stage),
                                       sim.now)
 
-    def _fetch_then(self, w: Workflow, rs: RequestState, s, then):
-        """Fetch all of stage s's inputs, then call `then()`."""
+    def _fetch_then(self, w: Workflow, rs: RequestState, s, then,
+                    held: str = ""):
+        """Fetch all of stage s's inputs, then call `then()`.
+
+        One terminal fetch failure poisons the whole group (``dead``):
+        sibling fetches that still land must not start the compute —
+        the stage re-triggers through recovery with a fresh group."""
         sim = self.tube.sim
         gpu = self._gpu_of(w, s) if s.kind == "gpu" else "host"
         needed = []
@@ -195,11 +339,13 @@ class WorkflowEngine:
         if not needed:
             then()
             return
-        pending = {"n": len(needed)}
+        pending = {"n": len(needed), "dead": False}
         t_fetch_start = sim.now
 
         for did, kind in needed:
             def on_ready(sim2, t, kind=kind, t0=t_fetch_start):
+                if pending["dead"]:
+                    return
                 dt = t - t0
                 if kind == "h2g":
                     rs.h2g_ms = max(rs.h2g_ms, dt)
@@ -208,9 +354,15 @@ class WorkflowEngine:
                 pending["n"] -= 1
                 if pending["n"] == 0:
                     then()
+
+            def on_error(sim2, err, did=did):
+                if pending["dead"]:
+                    return
+                pending["dead"] = True
+                self._fetch_failed(w, rs, s, did, err, held)
             self.tube.fetch(f"r{rs.rid}:{s.name}", did, gpu, sim.now,
                             slo_ms=rs.slo_ms, infer_ms=s.compute_ms,
-                            on_ready=on_ready)
+                            on_ready=on_ready, on_error=on_error)
 
     def _run_stage(self, w: Workflow, rs: RequestState, s):
         sim = self.tube.sim
@@ -258,6 +410,19 @@ class WorkflowEngine:
             if ret_mb and s.kind == "gpu":
                 def returned(sim2, tr):
                     self._complete(rs)
+
+                def ret_failed(sim2, err):
+                    # the return copy died terminally (its node crashed
+                    # mid-put): re-execute the sink stage on the
+                    # remapped GPU — its consumed inputs walk the
+                    # lineage recovery like any other loss
+                    if not self._budget_ok(rs, s):
+                        self._fail_request(rs)
+                        return
+                    for coll in (rs.done_stages, rs.started_stages,
+                                 rs.stored_stages, rs.fetched_stages):
+                        coll.discard(s.name)
+                    self._try_stage(w, rs, s)
                 gpu = self._gpu_of(w, s)
                 # the return copy carries the request's SLO context down
                 # so it is foreground-admitted like any fetch (it used to
@@ -270,7 +435,8 @@ class WorkflowEngine:
                     rem = max(rs.slo_ms - rs.h2g_ms - rs.g2g_ms
                               - rs.compute_ms, 1e-3)
                 self.tube.put(f"r{rs.rid}:ret", gpu, ret_mb, sim.now,
-                              slo_ms=rem, on_done=returned)
+                              slo_ms=rem, on_done=returned,
+                              on_error=ret_failed)
                 return
             self._complete(rs)
 

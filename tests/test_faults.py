@@ -1,0 +1,370 @@
+"""Fault model: link death mid-burst (the old stale-heap hazard),
+engine retry/re-plan, the location state machine's failure transitions,
+lineage recovery, the shared error taxonomy, and the determinism /
+zero-overhead guarantees of the chaos harness."""
+import dataclasses
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core.api import FAASTUBE, FaaSTube
+from repro.core.elastic_pool import ElasticPool
+from repro.core.faults import FaultInjector, FaultSchedule
+from repro.core.linksim import LinkSim
+from repro.core.migration import DEVICE, HOST, SPILLING
+from repro.core.topology import cluster, dgx_v100
+from repro.core.transfer import RecoveryPolicy
+from repro.errors import (FaaSTubeError, NodeFailure, ObjectLost,
+                          PoolCapacityError, StragglerTimeout,
+                          TransferFailed)
+from repro.serving.executor import WorkflowEngine
+from repro.serving.workflow import WORKFLOWS
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# ------------------------------------------------- linksim fault model --
+
+def test_kill_contended_link_mid_burst():
+    """Regression for the fail_link-during-flight hazard: killing a link
+    while a contended DRR round is in flight must fail its transfers at
+    the failure epoch — no stranded heap events, no half-evicted ring
+    state — and leave unrelated links untouched."""
+    sim = LinkSim(dgx_v100(), policy="drr")
+    done = {}
+    a = sim.submit("a", [(("gpu0", "gpu1"), 1.0)], 64.0, t=0.0,
+                   on_done=lambda s, tr: done.__setitem__(tr.tid, s.now))
+    b = sim.submit("b", [(("gpu0", "gpu1"), 1.0)], 64.0, t=0.0,
+                   on_done=lambda s, tr: done.__setitem__(tr.tid, s.now))
+    c = sim.submit("c", [(("gpu2", "gpu3"), 1.0)], 64.0, t=0.0,
+                   on_done=lambda s, tr: done.__setitem__(tr.tid, s.now))
+    sim.call_at(0.3, lambda s: s.kill_link("gpu0", "gpu1"))
+    sim.run()                        # must drain — nothing stranded
+    for tid in (a, b):
+        tr = sim.transfers[tid]
+        assert tr.failed and tr.t_done >= 0.3
+        assert tr.chunks_done < tr.n_chunks
+        assert done[tid] == tr.t_done
+    # bystander on another link is byte-identical to a fault-free run
+    tr = sim.transfers[c]
+    assert not tr.failed and done[c] == pytest.approx(64.0 / 48.0)
+    # failed transfers deliver no byte credit
+    assert sim.mb_by_class["fg"] == pytest.approx(64.0)
+
+
+def test_kill_link_fails_queued_and_future_arrivals():
+    sim = LinkSim(dgx_v100(), policy="drr")
+    seen = []
+    sim.kill_link("gpu0", "gpu1")
+    t = sim.submit("f", [(("gpu0", "gpu1"), 1.0)], 16.0, t=1.0,
+                   on_done=lambda s, tr: seen.append(tr.failed))
+    sim.run()
+    assert sim.transfers[t].failed and seen and seen[0]
+
+
+def test_brownout_retimes_in_flight_service():
+    """Halving the bandwidth mid-flight: committed prefix at the old
+    rate, remainder at the new one."""
+    sim = LinkSim(dgx_v100(), policy="drr")
+    done = {}
+    tid = sim.submit("f", [(("gpu0", "gpu1"), 1.0)], 64.0, t=0.0,
+                     on_done=lambda s, tr: done.__setitem__("t", s.now))
+    sim.call_at(64.0 / 48.0 / 2, lambda s: s.retime_link("gpu0", "gpu1",
+                                                         24.0))
+    sim.run()
+    assert not sim.transfers[tid].failed
+    # ~half moved at 48 GB/s, the rest at 24: total ~= 2/3 + 4/3 = 2.0
+    assert 64.0 / 48.0 < done["t"] <= 64.0 / 24.0
+    assert done["t"] == pytest.approx(2.0, rel=0.1)
+
+
+# --------------------------------------------------- engine retry ladder --
+
+def test_engine_replans_around_link_death():
+    tube = FaaSTube(dgx_v100(), FAASTUBE)
+    tube.engine.recovery = RecoveryPolicy()
+    res = {}
+    plan = tube.engine.compile("g2g", "f", "gpu1", "gpu5", 64.0)
+    tube.engine.submit(plan, 0.0,
+                       on_done=lambda s, tr: res.setdefault("t", s.now),
+                       on_fail=lambda s, e: res.setdefault("err", e))
+    tube.sim.call_at(0.2, lambda s: tube.fail_link("gpu1", "gpu5"))
+    tube.sim.run()
+    assert "err" not in res and "t" in res
+    assert tube.engine.retries >= 1 and tube.engine.failures == 0
+    assert ("gpu1", "gpu5") not in tube.topo.edges
+
+
+def test_retry_exhaustion_surfaces_structured_failure():
+    """Severing every route out of the source: the ladder fails fast
+    (dead-end check) with a structured TransferFailed."""
+    tube = FaaSTube(dgx_v100(), FAASTUBE)
+    tube.engine.recovery = RecoveryPolicy(max_retries=3)
+    errs = []
+    plan = tube.engine.compile("g2g", "f", "gpu0", "gpu5", 32.0)
+    tube.engine.submit(plan, 0.0,
+                       on_done=lambda s, tr: errs.append("done"),
+                       on_fail=lambda s, e: errs.append(e))
+
+    def isolate(s):
+        for nb in list(tube.topo.neighbors("gpu0")):
+            tube.fail_link("gpu0", nb)
+    tube.sim.call_at(0.1, isolate)
+    tube.sim.run()
+    assert len(errs) == 1
+    e = errs[0]
+    assert isinstance(e, TransferFailed)
+    assert e.func == "f" and e.kind == "g2g" and e.attempts >= 1
+    assert e.src == "gpu0" and e.dst == "gpu5"
+    assert tube.engine.failures == 1
+
+
+def test_hop_deadline_watchdog_fails_stalled_transfer():
+    """A transfer that cannot finish inside its deadline is failed
+    through the simulator and climbs the ladder to exhaustion."""
+    tube = FaaSTube(dgx_v100(), FAASTUBE)
+    tube.engine.recovery = RecoveryPolicy(max_retries=1,
+                                          deadline_base_ms=0.2)
+    errs = []
+    plan = tube.engine.compile("g2g", "f", "gpu0", "gpu2", 64.0)
+    tube.engine.submit(plan, 0.0,
+                       on_done=lambda s, tr: errs.append("done"),
+                       on_fail=lambda s, e: errs.append(e))
+    tube.sim.run()
+    assert len(errs) == 1 and isinstance(errs[0], TransferFailed)
+    assert errs[0].cause == "deadline"
+
+
+def test_backoff_is_capped_exponential():
+    rec = RecoveryPolicy(backoff_ms=2.0, backoff_cap_ms=8.0)
+    delays = [min(rec.backoff_ms * 2 ** a, rec.backoff_cap_ms)
+              for a in range(5)]
+    assert delays == [2.0, 4.0, 8.0, 8.0, 8.0]
+    assert RecoveryPolicy().deadline_ms(64.0) == 0.0   # watchdog off
+    armed = RecoveryPolicy(deadline_base_ms=1.0, deadline_per_mb=0.5)
+    assert armed.deadline_ms(64.0) == pytest.approx(33.0)
+
+
+# -------------------------------------- location state machine failures --
+
+def test_node_crash_invalidates_store_and_fails_parked_fetches():
+    topo = cluster(2)
+    tube = FaaSTube(topo, dataclasses.replace(FAASTUBE, store_cap_mb=64.0))
+    tube.engine.recovery = RecoveryPolicy()
+    sim = tube.sim
+    tube.store("f", "d1", 40.0, "n1:gpu0", 0.0, consumer_pos=1)
+    tube.store("f", "d2", 40.0, "n1:gpu0", 0.0, consumer_pos=2)
+    sim.run()
+    item = tube.items["n1:gpu0"]["d1"]
+    assert item.state == HOST            # spilled under pressure
+    errs = []
+    tube.fetch("g1", "d1", "n1:gpu1", sim.now,
+               on_ready=lambda s, t: errs.append("ready"),
+               on_error=lambda s, e: errs.append(e))
+    assert item.state == "reloading"
+    # a second fetch parks on the in-flight reload
+    tube.fetch("g2", "d1", "n1:gpu1", sim.now,
+               on_ready=lambda s, t: errs.append("ready"),
+               on_error=lambda s, e: errs.append(e))
+    tube.crash_node("n1")
+    sim.run()
+    assert len(errs) == 2
+    # in-flight reload surfaces the engine's TransferFailed; the parked
+    # waiter gets ObjectLost — both structured, neither a bare callback
+    assert all(isinstance(e, FaaSTubeError) for e in errs)
+    assert any(isinstance(e, ObjectLost) for e in errs)
+    # pool residency and index entries are gone, with no double-free
+    assert "n1:gpu0" not in tube.pools and "n1" in tube.dead_nodes
+    with pytest.raises(KeyError):
+        tube.index.lookup("n0", "d1")
+    # foreground admissions were released (no leaked flows)
+    assert not tube.sched.flows if hasattr(tube.sched, "flows") else True
+
+
+def test_spill_failure_leaves_device_copy_authoritative():
+    topo = cluster(2)
+    tube = FaaSTube(topo, FAASTUBE)
+    sim = tube.sim
+    tube.store("f", "d1", 32.0, "n0:gpu0", 0.0)
+    sim.run()
+    item = tube.items["n0:gpu0"]["d1"]
+    tube._spill(item, "n0:gpu0", sim.now)
+    assert item.state == SPILLING
+    tube.lose_host("n0:host")            # staging ring lost mid-spill
+    sim.run()
+    assert item.state == DEVICE and item.held == "n0:gpu0"
+    assert item.host == ""
+    rec, _ = tube.index.lookup("n0", "d1")
+    assert rec.device == "n0:gpu0"       # device copy stayed authoritative
+
+
+def test_lose_host_drops_spilled_items():
+    topo = cluster(2)
+    tube = FaaSTube(topo, dataclasses.replace(FAASTUBE, store_cap_mb=64.0))
+    sim = tube.sim
+    tube.store("f", "d1", 40.0, "n0:gpu0", 0.0, consumer_pos=1)
+    tube.store("f", "d2", 40.0, "n0:gpu0", 0.0, consumer_pos=2)
+    sim.run()
+    assert tube.items["n0:gpu0"]["d1"].state == HOST
+    tube.lose_host("n0:host")
+    assert "d1" not in tube.items["n0:gpu0"]
+    assert tube.stats["lost"] >= 1
+    with pytest.raises(KeyError):
+        tube.index.lookup("n0", "d1")
+    # the device-resident survivor is untouched
+    assert tube.items["n0:gpu0"]["d2"].state == DEVICE
+
+
+# ----------------------------------------------------- lineage recovery --
+
+def _video_engine(recover: bool):
+    topo = cluster(2)
+    w = WORKFLOWS["video"]
+    gpus = [g for g in topo.gpus if g.startswith("n0:")]
+    placements = {w.name: {
+        "face_det0": gpus[0], "face_det1": gpus[1],
+        "face_det2": gpus[2], "recognize": gpus[3]}}
+    eng = WorkflowEngine(topo, FAASTUBE, placements=placements,
+                         recover=recover)
+    eng.tube.engine.recovery = RecoveryPolicy()
+    return eng, w
+
+
+def test_lineage_reexecutes_lost_fan_in_intermediate():
+    """Crash the node holding a fan-in stage's inputs mid-run: inputs
+    are re-published, producers re-executed on remapped GPUs, and the
+    request still completes."""
+    eng, w = _video_engine(recover=True)
+    eng.submit_workflow(w, 0.0)
+    eng.tube.sim.call_at(30.0, lambda s: eng.tube.crash_node("n0"))
+    eng.run()
+    assert len(eng.completed) == 1 and not eng.failed
+    assert eng.recovered_stages >= 1
+    assert all(g.startswith("n1:") for g in eng._remap.values())
+
+
+def test_no_retry_arm_fails_request_on_crash():
+    eng, w = _video_engine(recover=False)
+    eng.submit_workflow(w, 0.0)
+    eng.tube.sim.call_at(30.0, lambda s: eng.tube.crash_node("n0"))
+    eng.run()
+    assert len(eng.completed) == 0
+    assert len(eng.failed) == 1 and eng.failed[0].failed
+
+
+def test_recovery_budget_caps_reexecution():
+    eng, w = _video_engine(recover=True)
+    rs_like = eng.requests  # no requests yet
+    eng.submit_workflow(w, 0.0)
+    rs = eng.requests[0]
+    s = w.stages[1]
+    assert all(eng._budget_ok(rs, s) for _ in range(5))
+    assert not eng._budget_ok(rs, s)     # budget exhausted
+    assert rs_like is eng.requests
+
+
+# ----------------------------------------------------- error taxonomy ----
+
+def test_error_taxonomy_is_shared_and_structured():
+    from repro.distributed import fault as dist_fault
+    assert dist_fault.NodeFailure is NodeFailure
+    assert dist_fault.StragglerTimeout is StragglerTimeout
+    for cls in (TransferFailed, ObjectLost, NodeFailure, StragglerTimeout,
+                PoolCapacityError):
+        assert issubclass(cls, FaaSTubeError)
+    tf = TransferFailed("f", "a", "b", "g2g", "link a-b", 3)
+    assert (tf.func, tf.src, tf.dst, tf.kind, tf.cause, tf.attempts) == \
+        ("f", "a", "b", "g2g", "link a-b", 3)
+    ol = ObjectLost("d1", "n1", "node n1 crashed")
+    assert ol.data_id == "d1" and ol.node == "n1"
+
+
+def test_pool_capacity_error_carries_structured_cause():
+    pool = ElasticPool("gpu0", capacity_mb=4.0)
+    with pytest.raises(PoolCapacityError) as ei:
+        pool.alloc("f", 100.0, 0.0)
+    assert ei.value.device == "gpu0"
+    assert ei.value.need_mb == pytest.approx(100.0)
+    assert ei.value.cause == "capacity"
+
+
+# ------------------------------------------------ schedule determinism ---
+
+def test_fault_schedule_generation_is_seeded():
+    topo = cluster(4)
+    a = FaultSchedule.generate(topo, seed=7, horizon_ms=200.0, n_link=4,
+                               n_brownout=2, n_node=1, n_host=1)
+    b = FaultSchedule.generate(topo, seed=7, horizon_ms=200.0, n_link=4,
+                               n_brownout=2, n_node=1, n_host=1)
+    assert list(a) == list(b) and len(a) == 8
+    c = FaultSchedule.generate(topo, seed=8, horizon_ms=200.0, n_link=4,
+                               n_brownout=2, n_node=1, n_host=1)
+    assert list(a) != list(c)
+    kinds = a.by_kind()
+    assert kinds["link"] == 4 and kinds["node"] == 1
+
+
+_TRACE_SCRIPT = r"""
+import hashlib, json
+from repro.core.api import FAASTUBE
+from repro.core.faults import FaultInjector, FaultSchedule
+from repro.core.topology import cluster
+from repro.core.transfer import RecoveryPolicy
+from repro.serving.executor import WorkflowEngine
+from repro.serving.workflow import WORKFLOWS
+
+topo = cluster(2)
+sched = FaultSchedule.generate(topo, seed=11, horizon_ms=150.0,
+                               n_link=3, n_brownout=2, n_node=1)
+eng = WorkflowEngine(topo, FAASTUBE)
+FaultInjector(eng.tube, sched, recovery=RecoveryPolicy()).arm()
+for i, name in enumerate(("video", "driving", "traffic", "image")):
+    eng.submit_workflow(WORKFLOWS[name], 5.0 * i)
+eng.run()
+trace = sorted(
+    (tr.tid, tr.func, round(tr.t_submit, 9), round(tr.t_done, 9),
+     tr.failed, tr.chunks_done)
+    for tr in eng.tube.sim.transfers.values())
+trace.append(tuple(sorted(round(r.t_done, 9) for r in eng.completed)))
+print(hashlib.sha256(json.dumps(trace, sort_keys=True,
+                                default=list).encode()).hexdigest())
+"""
+
+
+def test_chaos_trace_identical_across_hash_seeds():
+    """Same FaultSchedule seed -> byte-identical event trace, whatever
+    PYTHONHASHSEED the process was salted with."""
+    digests = set()
+    for hs in ("0", "1", "31337"):
+        env = dict(os.environ, PYTHONHASHSEED=hs,
+                   PYTHONPATH=str(REPO / "src"))
+        out = subprocess.run([sys.executable, "-c", _TRACE_SCRIPT],
+                             env=env, capture_output=True, text=True,
+                             cwd=REPO, timeout=300)
+        assert out.returncode == 0, out.stderr
+        digests.add(out.stdout.strip())
+    assert len(digests) == 1
+
+
+def test_empty_schedule_is_bit_identical_zero_overhead():
+    """Arming an empty schedule (with recovery attached) adds ZERO
+    simulator events: the no-fault path is byte-identical."""
+    from repro.core import linksim as L
+
+    def run(arm: bool):
+        topo = cluster(2)
+        eng = WorkflowEngine(topo, FAASTUBE)
+        if arm:
+            FaultInjector(eng.tube, FaultSchedule(),
+                          recovery=RecoveryPolicy()).arm()
+        for i, name in enumerate(("video", "driving", "image")):
+            eng.submit_workflow(WORKFLOWS[name], 3.0 * i)
+        e0 = L.TOTAL_EVENTS
+        eng.run()
+        return (L.TOTAL_EVENTS - e0,
+                sorted(round(r.t_done, 12) for r in eng.completed))
+
+    assert run(False) == run(True)
