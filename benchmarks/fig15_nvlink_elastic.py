@@ -5,7 +5,9 @@
 of the workflow share the DGX; the second lands on the leftover GPUs, so
 its inter-stage edges cross bandwidth-limited pairs.  MAPA places
 optimally but uses the single direct NVLink path; FaaSTube stripes over
-parallel paths.  Paper: +18%/+13%/+17% throughput on video/image/traffic.
+parallel paths AND pipelines stage compute against the residual transfer
+(``TubeConfig.overlap`` — the trigger-batch progress contract).  Paper:
++18%/+13%/+17% throughput on video/image/traffic.
 
 (b) under memory pressure (store cap < working set), the auto-scaling
 pool (AP) removes per-output cudaMalloc and the queue-aware migration
@@ -23,6 +25,11 @@ from repro.serving.workflow import WORKFLOWS, place
 from benchmarks.common import emit, lat_ms, p99, run_trace
 
 MAPA = dataclasses.replace(FAASTUBE, g2g="direct", name="mapa")
+# (a)'s FaaSTube arm runs the full system: multipath striping + the
+# compute/transfer overlap contract.  MAPA stays placement-only (direct
+# path, all-deps-complete gate) — the paper's baseline doesn't pipeline.
+FT_OVERLAP = dataclasses.replace(FAASTUBE, overlap=True,
+                                 name="faastube-ov")
 NO_AP = dataclasses.replace(FAASTUBE, pool="none", name="faastube-ap")
 NO_SM = dataclasses.replace(FAASTUBE, migration="lru", name="faastube-sm")
 PRESSURE = dict(store_cap_mb=192.0)
@@ -58,7 +65,7 @@ def main():
     # (a) multipath vs placement-only under co-location
     gains = {}
     for wname in ("video", "image", "traffic"):
-        t_ft = two_instance_tput(FAASTUBE, wname)
+        t_ft = two_instance_tput(FT_OVERLAP, wname)
         t_mapa = two_instance_tput(MAPA, wname)
         gains[wname] = 100 * (t_ft / t_mapa - 1)
         emit("fig15", f"{wname}.tput_vs_mapa", gains[wname], "%",
@@ -92,10 +99,10 @@ def main():
             # pool="none" baseline actually migrate under this cap
             assert eng_ft.tube.stats["migrations"] > 0
             assert eng_noap.tube.stats["migrations"] > 0
-    # honest NVLink-only band (see NO_PRESSURE note): traffic ~8% with
-    # the saturated-multipath stripe fallback (7.4% before it), and all
-    # three workflows now gain vs MAPA (video was -1.5% single-route)
-    assert max(gains.values()) >= 6.0, gains
+    # with the overlap contract the co-location gap reaches the paper's
+    # 13-18% band (traffic was ~8% striping-only: the residual distance
+    # was pipelining, not path selection — ROADMAP fig15(a) item)
+    assert gains["traffic"] >= 13.0, gains
     assert min(gains.values()) >= 0.0, gains
     return gains
 

@@ -1,0 +1,74 @@
+"""Compute/transfer overlap micro (the partial-input contract's CI gate).
+
+One representative workflow per DAG class (condition / sequence / fan-in /
+fan-out), batch-4 tensors, 8 requests closed-loop on one DGX, run twice:
+``TubeConfig.overlap=False`` (the all-deps-complete gate) vs ``=True``
+(stages start on their first landed trigger batch and pipeline compute
+against the residual transfer).  Everything runs on the simulated clock,
+so makespan, mean latency and the event count are deterministic; results
+land in ``BENCH_overlap.json`` and are band-gated in CI.
+
+Acceptance: overlap must never be slower than serial on any class, and
+must cut the makespan >= 5% on every class at batch-4 sizes (the weakest
+is the strictly sequential chain, where only one edge per request can
+pipeline at a time).  The serial arm's event count is also recorded —
+``overlap=False`` must stay byte-identical to a pre-overlap build, so a
+drifted ``serial.events`` here means the zero-cost guarantee broke.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from benchmarks.common import emit
+from repro.core.api import FAASTUBE
+from repro.core.topology import dgx_v100
+from repro.serving.executor import run_closed_loop
+from repro.serving.workflow import WORKFLOWS
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_overlap.json")
+N_REQ = 8
+CLASSES = (("condition", "traffic"), ("sequence", "driving"),
+           ("fan-in", "video"), ("fan-out", "image"))
+
+OVERLAP = dataclasses.replace(FAASTUBE, overlap=True, name="faastube-ov")
+
+
+def one_arm(cfg, w) -> dict:
+    eng = run_closed_loop(dgx_v100, cfg, w, n_requests=N_REQ)
+    assert len(eng.completed) == N_REQ and not eng.failed
+    lats = [r.t_done - r.t_arrive for r in eng.completed]
+    return {"makespan_ms": round(max(r.t_done for r in eng.completed), 3),
+            "mean_lat_ms": round(sum(lats) / len(lats), 3),
+            "events": eng.tube.sim.n_events}
+
+
+def main():
+    from benchmarks.fig03_motivation import scale_workflow
+    report: dict = {}
+    for cls, wname in CLASSES:
+        w = dataclasses.replace(scale_workflow(WORKFLOWS[wname], 4.0),
+                                name=wname)
+        serial = one_arm(FAASTUBE, w)
+        over = one_arm(OVERLAP, w)
+        cut = 100 * (1 - over["makespan_ms"] / serial["makespan_ms"])
+        report[cls] = {"workflow": wname, "serial": serial,
+                       "overlap": over,
+                       "makespan_cut_pct": round(cut, 3)}
+        emit("overlap", f"{cls}.makespan_cut", cut, "%",
+             f"{wname} b4: serial={serial['makespan_ms']:.1f}ms "
+             f"overlap={over['makespan_ms']:.1f}ms")
+
+    with open(DEFAULT_OUT, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+
+    for cls, r in report.items():
+        assert r["makespan_cut_pct"] >= 5.0, (cls, r)
+    return report
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(0 if main() else 1)

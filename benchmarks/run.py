@@ -35,6 +35,7 @@ EXTRAS = [
     "megafleet",    # 4096 concurrent workflows on a 64-node cluster
     "memstress",    # store_cap sweep under bursty memory pressure
     "isoperf",      # fg SLO attainment vs bg migration pressure
+    "overlap",      # compute/transfer overlap on/off per workflow class
 ]
 
 

@@ -2,12 +2,17 @@
 
 1. The paper's data plane: store()/fetch() through the tube on a DGX-V100
    topology; watch GPU-oriented passing beat host-oriented passing.
-2. The TPU adaptation: the same pathfinder striping a reshard across
+2. Compute/transfer overlap: observe landed trigger batches on a fetch,
+   partial-consume the prefix, and run a workflow with
+   ``TubeConfig.overlap`` pipelining stage compute against transfers.
+3. The TPU adaptation: the same pathfinder striping a reshard across
    edge-disjoint ICI paths on a v5e torus.
-3. A reduced LM through the serving engine (real JAX compute on CPU).
+4. A reduced LM through the serving engine (real JAX compute on CPU).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import dataclasses
+
 import jax
 
 from repro.core.api import FAASTUBE, INFLESS, FaaSTube
@@ -28,8 +33,41 @@ def demo_tube():
               f"{done['t']:7.2f} ms")
 
 
+def demo_overlap():
+    print("\n=== 2. Compute/transfer overlap: partial-input stages ===")
+    # a consumer subscribed to a fetch's trigger-batch progress may
+    # start computing on the landed prefix: consume(partial=True) flips
+    # the object to PARTIAL residency (unspillable, released only when
+    # the last in-flight reader drains) and returns the readable MB
+    tube = FaaSTube(dgx_v100(), FAASTUBE)
+    tube.store("producer", "act1", 64.0, "gpu1", 0.0)
+
+    def on_progress(sim, h):
+        if h.done_mb < h.total_mb:
+            prefix = tube.consume("act1", "gpu1", sim.now, partial=True)
+            print(f"  t={sim.now:6.2f} ms  landed {h.done_mb:5.1f}"
+                  f"/{h.total_mb:.0f} MB (readable prefix "
+                  f"{prefix:.1f} MB)")
+    tube.fetch("consumer", "act1", "gpu4", 0.0, on_progress=on_progress,
+               on_ready=lambda s, t: print(f"  t={t:6.2f} ms  complete"))
+    tube.sim.run()
+
+    # end to end: TubeConfig.overlap=True lets every opted-in stage
+    # (Stage.partial, the default) pipeline compute with its residual
+    # input transfer — the serial gate stays the default (overlap=False)
+    from repro.serving.executor import run_closed_loop
+    from repro.serving.workflow import WORKFLOWS
+    ov = dataclasses.replace(FAASTUBE, overlap=True, name="faastube-ov")
+    for cfg in (FAASTUBE, ov):
+        eng = run_closed_loop(dgx_v100, cfg, WORKFLOWS["traffic"],
+                              n_requests=4)
+        mk = max(r.t_done for r in eng.completed)
+        tag = "overlap on " if cfg.overlap else "overlap off"
+        print(f"  {tag}  4x traffic workflow makespan: {mk:7.2f} ms")
+
+
 def demo_torus():
-    print("\n=== 2. Multi-path ICI routing on the v5e torus ===")
+    print("\n=== 3. Multi-path ICI routing on the v5e torus ===")
     topo = tpu_torus(8, 8, hosts=False)
     pf = PathFinder(topo, transit="chip")
     allocs = pf.select_paths("reshard", "chip0_0", "chip3_2")
@@ -41,7 +79,7 @@ def demo_torus():
 
 
 def demo_engine():
-    print("\n=== 3. Serving a reduced LM (real compute) ===")
+    print("\n=== 4. Serving a reduced LM (real compute) ===")
     from repro.configs import get_arch
     from repro.configs.base import ShapeSpec
     from repro.models import model as M
@@ -60,5 +98,6 @@ def demo_engine():
 
 if __name__ == "__main__":
     demo_tube()
+    demo_overlap()
     demo_torus()
     demo_engine()

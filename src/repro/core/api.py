@@ -43,18 +43,20 @@ from __future__ import annotations
 from collections import deque
 from dataclasses import dataclass
 
+from repro.core.chaos_api import ChaosMixin
 from repro.core.elastic_pool import BLOCK_MB, ElasticPool, blocks_for
 from repro.core.index import DataIndex, DataRecord
 from repro.core.linksim import LinkSim, alloc_ms
 from repro.core.migration import (
-    DEVICE, HOST, RELOADING, SPILLING, Migrator, StoredItem)
+    DEVICE, HOST, PARTIAL, RELOADING, SPILLING, MigrationMixin, Migrator,
+    StoredItem)
 from repro.core.pathfinder import PathFinder
-from repro.core.pcie_scheduler import BACKGROUND, PcieScheduler
+from repro.core.pcie_scheduler import PcieScheduler
 from repro.core.pinned_buffer import CircularPinnedBuffer
 from repro.core.topology import PCIE_PINNED, Topology
 from repro.core.transfer import (
-    CUT_THROUGH, STORE_FORWARD, TransferEngine, host_of, is_device,
-    node_of)
+    CUT_THROUGH, STORE_FORWARD, TransferEngine, TransferHandle, host_of,
+    is_device, node_of)
 from repro.errors import ObjectLost
 
 # location helpers are shared data-plane vocabulary (transfer.py);
@@ -94,6 +96,13 @@ class TubeConfig:
     # arrival gaps, so a continuously backlogged foreground trace can
     # starve migration (the ROADMAP open item this knob closes).
     bg_guard: int = 0
+    # compute/transfer overlap (paper Fig. 15a): opted-in executor
+    # stages start computing when their first trigger batch lands and
+    # pipeline against the residual transfer, partial-consuming their
+    # inputs (PARTIAL residency).  False — the default everywhere,
+    # including FAASTUBE — keeps the all-deps-complete gate and adds
+    # zero heap events, byte-identical to the pre-overlap data plane.
+    overlap: bool = False
 
 
 # INFless+ moves data through pageable host memory (shared-memory data
@@ -122,7 +131,7 @@ FAASTUBE = TubeConfig(name="faastube")
 SYSTEMS = {c.name: c for c in (INFLESS, DEEPPLAN, FAASTUBE_STAR, FAASTUBE)}
 
 
-class FaaSTube:
+class FaaSTube(ChaosMixin, MigrationMixin):
     def __init__(self, topo: Topology, cfg: TubeConfig = FAASTUBE):
         self.topo = topo
         self.cfg = cfg
@@ -162,6 +171,12 @@ class FaaSTube:
         # allocations waiting for victim spills to free room, per device:
         # deque of (size_mb, func, grant) served FIFO as capacity returns
         self._pending: dict[str, deque] = {}
+        # compute/transfer overlap bookkeeping: in-flight reader count
+        # and progress handles per data_id, plus partial consumes whose
+        # real release is deferred until the last reader lands
+        self._readers: dict[str, int] = {}
+        self._reader_handles: dict[str, list] = {}
+        self._pending_consume: dict[str, str] = {}
 
     # --------------------------------------------------------------- api --
     def unique_id(self) -> str:
@@ -301,269 +316,11 @@ class FaaSTube:
         else:
             self._pending.pop(device, None)
 
-    # ---------------------------------------------------- spill / reload --
-    def _spill(self, v: StoredItem, device: str, now: float):
-        """DEVICE -> SPILLING.  The HBM copy stays valid (and allocated)
-        until the g2h transfer completes.  The plan is BACKGROUND class:
-        the engine admits it as a per-transfer migration flow granted
-        only residual bandwidth (or at foreground parity when
-        ``bg_migration=False``, the contrast arm)."""
-        v.set_state(SPILLING)
-        v.host = host_of(device)
-        self.stats["migrations"] += 1
-
-        def landed(sim, tr=None):
-            self._spill_complete(v, device, sim.now)
-
-        def lost(sim, err):
-            # g2h failed terminally: the device copy never left — it
-            # stays authoritative.  Re-run victim selection; whatever
-            # allocation forced this spill still needs the room.
-            if self.items.get(device, {}).get(v.data_id) is not v \
-                    or v.state != SPILLING:
-                return
-            v.set_state(DEVICE)
-            v.host = ""
-            self._make_room(device, sim.now)
-        plan = self.engine.compile("spill", v.func or "migrate", device,
-                                   v.host, v.size_mb, cls=BACKGROUND)
-        self.engine.submit(plan, now, on_done=landed, on_fail=lost)
-
-    def _spill_complete(self, v: StoredItem, device: str, t: float):
-        """SPILLING -> HOST: free the HBM blocks and flip the index
-        record to the host the data actually landed on."""
-        if self.items.get(device, {}).get(v.data_id) is not v \
-                or v.state != SPILLING:
-            return          # consumed while the copy was in flight
-        rec = self.index.global_table.get(v.data_id)
-        self._release_item(v, rec, t)
-        v.set_state(HOST)
-        if rec is not None:
-            self.index.relocate(rec, v.host, "host")
-        self._drain_pending(device, t)
-
-    def _demand_reload(self, func: str, item: StoredItem, rec, dst: str,
-                       t0: float, done, fail=None):
-        """HOST -> RELOADING -> DEVICE: reload from the host the item
-        spilled to (inter-node when the consumer sits on another node),
-        paying destination allocation + PCIe h2g.  The index flips back
-        to "device" only when the copy lands."""
-        self.stats["reloads"] += 1
-        src_host = rec.device if rec.device and not is_device(rec.device) \
-            else (item.host or host_of(dst))
-        home = self._home.get(item.data_id, dst)
-        item.set_state(RELOADING)
-
-        def grant(t, buf, cost):
-            if self.items.get(home, {}).get(item.data_id) is not item:
-                # consumed while waiting for room: the fetch can never be
-                # served, but its foreground admission must still be
-                # released or the flow leaks (refs never reach 0 and its
-                # rate_least shrinks the background residual forever).
-                # No t: an unserved transfer is not an SLO miss.
-                self._unalloc(dst, buf, item.size_mb, t)
-                if self.sched:
-                    self.sched.complete(func)
-                return
-            if node_of(dst) in self.dead_nodes:
-                # destination crashed while the reload waited for room:
-                # the host copy is untouched — put the item back and
-                # fail over this fetch (and any parked on it)
-                self._unalloc(dst, buf, item.size_mb, t)
-                item.held = ""
-                err = ObjectLost(item.data_id, node_of(dst),
-                                 "destination node crashed")
-                item.set_state(HOST)
-                self._fail_waiters(item, err)
-                if fail is not None:
-                    fail(self.sim, err)      # releases the admission
-                elif self.sched:
-                    self.sched.complete(func)
-                return
-            self.stats["alloc_ms"] += cost
-            item.held = dst
-            if buf >= 0:
-                rec.buf_id = buf
-
-            def landed(sim, tr=None):
-                self._reload_complete(item, rec, dst, sim)
-                done(sim)
-
-            def lost(sim, err):
-                self._reload_failed(item, rec, home, err,
-                                    redispatch=False)
-                if fail is not None:
-                    fail(sim, err)
-            # the reload blocks a foreground fetch, so it rides that
-            # fetch's own foreground admission (not the migration class)
-            plan = self.engine.compile("reload", func, src_host, dst,
-                                       rec.size_mb)
-            self.engine.submit(plan, t + cost, on_done=landed,
-                               on_fail=lost if fail is not None else None)
-
-        self._reserve(dst, item.func or func, rec.size_mb, t0, grant)
-
-    def _reload_complete(self, item: StoredItem, rec, dst: str, sim):
-        """RELOADING -> DEVICE: rehome the item onto the destination
-        store, flip the index, and re-dispatch any parked fetches."""
-        home = self._home.get(item.data_id)
-        if home is None \
-                or self.items.get(home, {}).get(item.data_id) is not item:
-            # consumed while the reload was in flight: drop the copy
-            self._release_item(item, rec, sim.now)
-            return
-        if home != dst:
-            del self.items[home][item.data_id]
-            self._pool(dst)                      # ensure the store exists
-            self.items[dst][item.data_id] = item
-            self._home[item.data_id] = dst
-        item.set_state(DEVICE)
-        item.host = ""
-        self.index.relocate(rec, dst, "device")
-        waiters, item.waiters = item.waiters, []
-        for w in waiters:
-            w(sim, sim.now)
-        self._drain_pending(dst, sim.now)
-
-    # --------------------------------------------------------------- faults -
-    # Failure transitions of the location state machine (fault model):
-    #
-    #   SPILLING  --g2h failed-->  DEVICE   (the HBM copy never left; it
-    #                                        stays authoritative)
-    #   RELOADING --h2g failed-->  HOST     (source copy intact: parked
-    #                                        fetches fail over, the item
-    #                                        stays fetchable)
-    #   RELOADING --source lost--> gone     (ObjectLost to every waiter)
-    #   any state --node crash -->  gone    (store invalidated wholesale)
-    #
-    # All of them run on *terminal* transfer failure — the engine's retry
-    # ladder has already re-planned around the fault before these fire.
-
-    def _fail_waiters(self, item: StoredItem, err):
-        """Fail over every fetch parked on the item with a structured
-        cause (waiter signature: ``w(sim, t, err=None)``)."""
-        waiters, item.waiters = item.waiters, []
-        for w in waiters:
-            w(self.sim, self.sim.now, err)
-
-    def _lose_item(self, home: str, item: StoredItem, cause: str):
-        """Drop an intermediate whose only copy is gone: release any
-        held memory, retract the index record, fail parked fetches."""
-        rec = self.index.global_table.get(item.data_id)
-        self._release_item(item, rec, self.sim.now)
-        self.items.get(home, {}).pop(item.data_id, None)
-        if self._home.get(item.data_id) == home:
-            self._home.pop(item.data_id, None)
-        self.index.drop(item.data_id)
-        self.stats["lost"] += 1
-        self._fail_waiters(item, ObjectLost(item.data_id, node_of(home),
-                                            cause))
-
-    def _reload_failed(self, item: StoredItem, rec, home: str, err, *,
-                       redispatch: bool):
-        """RELOADING failure transition: release the destination buffer;
-        source copy intact -> back to HOST (parked fetches re-dispatched
-        for background prefetches, failed over for demand reloads — a
-        re-dispatch there could ping-pong against a persistent fault);
-        source gone -> ObjectLost."""
-        self._release_item(item, rec, self.sim.now)
-        src_ok = item.host and node_of(item.host) not in self.dead_nodes
-        if not src_ok:
-            self._lose_item(home, item, "reload source lost")
-            return
-        item.set_state(HOST)
-        if redispatch:
-            waiters, item.waiters = item.waiters, []
-            for w in waiters:
-                w(self.sim, self.sim.now)
-        else:
-            self._fail_waiters(item, err)
-
-    def fail_link(self, a: str, b: str, cause: str = ""):
-        """Permanently fail the physical link a-b.
-
-        Order matters: the simulator truncates in-flight service FIRST
-        (the committed prefix is priced at the bandwidth it actually ran
-        at), then the pathfinder removes the edge so every re-plan routes
-        around it."""
-        self.sim.kill_link(a, b, cause or f"link {a}-{b}")
-        self.pf.fail_link(a, b)
-
-    def brownout(self, a: str, b: str, factor: float,
-                 duration_ms: float = 0.0):
-        """Degrade link a-b to ``factor`` of its bandwidth, restoring
-        after ``duration_ms`` (0 = permanent).  In-flight service is cut
-        at the old rate and re-dispatched at the new one."""
-        old = self.topo.bw(a, b)
-        if old <= 0.0:
-            return                      # edge already dead: nothing to do
-        new = old * factor
-        self.sim.retime_link(a, b, new)
-        self.pf.retime_link(a, b, new - old)
-        if duration_ms > 0.0:
-            def restore(sim):
-                cur = self.topo.bw(a, b)
-                if cur <= 0.0:          # killed while browned out
-                    return
-                self.sim.retime_link(a, b, old)
-                self.pf.retime_link(a, b, old - cur)
-            self.sim.call_at(self.sim.now + duration_ms, restore)
-
-    def crash_node(self, node: str):
-        """Crash cluster node ``node`` ("n3"): sever every link touching
-        it (in-flight transfers fail at the failure epoch and re-plan or
-        surface), notify crash listeners (the executor remaps placements
-        while the index is still coherent), then invalidate every object
-        stored on the node — parked fetches fail over with ObjectLost."""
-        if node in self.dead_nodes:
-            return
-        self.dead_nodes.add(node)
-        pre = node + ":"
-        t = self.sim.now
-        pairs = sorted({tuple(sorted(e)) for e in self.topo.edges
-                        if e[0].startswith(pre) or e[1].startswith(pre)})
-        for a, b in pairs:
-            self.sim.kill_link(a, b, f"node {node} crashed")
-            self.pf.fail_link(a, b)
-        for cb in list(self.crash_listeners):
-            cb(node, t)
-        for dev in sorted(d for d in self.items if d.startswith(pre)):
-            for item in list(self.items[dev].values()):
-                if item.state == RELOADING and item.held \
-                        and not item.held.startswith(pre):
-                    # reload already in flight toward a SURVIVING device:
-                    # the severed source link fails that transfer, and
-                    # the reload failure path decides the item's fate
-                    continue
-                self._lose_item(dev, item, f"node {node} crashed")
-            # deferred allocations on the dead device: fire each grant —
-            # the closures self-detect the vanished item / dead node and
-            # release whatever admission or memory they were holding
-            for _size, _func, grant in self._pending.pop(dev, ()):
-                grant(t, -1, 0.0)
-            self.pools.pop(dev, None)
-            self.resident.pop(dev, None)
-
-    def lose_host(self, host: str):
-        """Lose a staging host's memory (pinned ring contents + spilled
-        store) without taking its node down.  In-flight transfers staged
-        through the host fail (and re-plan — the ring itself recovers);
-        HOST-state items that spilled there are gone for good."""
-        # snapshot first: failing a staged transfer can re-plan and
-        # insert its replacement into sim.transfers mid-iteration
-        staged = [tid for tid, tr in self.sim.transfers.items()
-                  if tr.t_done < 0 and not tr.failed
-                  and tr.stage is not None and tr.stage_key == host]
-        for tid in staged:
-            self.sim.fail_transfer(tid, f"host {host} lost")
-        for dev in sorted(self.items):
-            for item in list(self.items[dev].values()):
-                if item.state == HOST and item.host == host:
-                    self._lose_item(dev, item, f"host {host} lost")
-                elif dev == host and item.state == DEVICE:
-                    # stored directly in the host's memory (workflow
-                    # inputs): contents lost with the host
-                    self._lose_item(dev, item, f"host {host} lost")
+    # The spill/reload lifecycle (DEVICE->SPILLING->HOST->RELOADING->
+    # DEVICE) lives in migration.py's MigrationMixin, next to the state
+    # machine it walks; the fault entry points (fail_link / brownout /
+    # crash_node / lose_host) and the failure transitions live in
+    # chaos_api.py's ChaosMixin.  Both are mixed into this class.
 
     # --------------------------------------------------------------- store -
     def store(self, func: str, data_id: str, size_mb: float, device: str,
@@ -641,14 +398,20 @@ class FaaSTube:
 
     def fetch(self, func: str, data_id: str, dst: str, now: float, *,
               slo_ms: float = 1e9, infer_ms: float = 0.0, on_ready=None,
-              on_error=None):
+              on_error=None, on_progress=None):
         """Fetch data_id into dst's address space; on_ready(sim, t) called.
 
         ``on_error(sim, err)`` fires instead when the fetch fails
         terminally: the id is not (or no longer) in the index, the data
         was lost to a node crash, or the transfer exhausted the engine's
         retry ladder.  Without an ``on_error`` an unknown id raises, as
-        it always did."""
+        it always did.
+
+        ``on_progress(sim, handle)`` — the overlap contract: fires on
+        every landed trigger batch with a monotone
+        :class:`~repro.core.transfer.TransferHandle`; the handle is also
+        returned.  None (the default) arms nothing: the event stream
+        stays byte-identical to a progress-free run."""
         if node_of(dst) in self.dead_nodes:
             if on_error is not None:
                 err = ObjectLost(data_id, node_of(dst),
@@ -681,7 +444,7 @@ class FaaSTube:
                     return
                 self.fetch(func, data_id, dst, t, slo_ms=slo_ms,
                            infer_ms=infer_ms, on_ready=on_ready,
-                           on_error=on_error)
+                           on_error=on_error, on_progress=on_progress)
             item.waiters.append(parked)
             return
         # HOST only: a SPILLING item's device copy is still valid — a
@@ -711,6 +474,7 @@ class FaaSTube:
                 self.sched.complete(func, t=sim.now)
             if on_ready:
                 on_ready(sim, sim.now)
+            self._reader_done(data_id, sim)
 
         def failed(sim, err):
             # a failed fetch is not an SLO sample: release the admission
@@ -719,10 +483,22 @@ class FaaSTube:
                 self.sched.complete(func)
             if on_error is not None:
                 on_error(sim, err)
+            self._reader_done(data_id, sim)
+
+        # in-flight reader refcount: a partial consume issued while any
+        # reader is still landing defers the real release to the last
+        # reader's completion (``_reader_done``)
+        handle = None
+        if on_progress is not None:
+            handle = TransferHandle(rec.size_mb)
+            handle.subscribe(on_progress)
+            self._reader_handles.setdefault(data_id, []).append(handle)
+        self._readers[data_id] = self._readers.get(data_id, 0) + 1
 
         if kind == "reload":
-            self._demand_reload(func, item, rec, dst, t0, done, failed)
-            return
+            self._demand_reload(func, item, rec, dst, t0, done, failed,
+                                handle=handle)
+            return handle
         a, b = src, dst
         if kind == "h2g" and not src:
             a = host_of(dst)
@@ -730,7 +506,8 @@ class FaaSTube:
                                    slo_ms=slo_ms, infer_ms=infer_ms)
         self.engine.submit(plan, t0, on_done=done,
                            on_fail=failed if on_error is not None
-                           else None)
+                           else None, handle=handle)
+        return handle
 
     def put(self, func: str, src_dev: str, size_mb: float, now: float, *,
             slo_ms: float = 1e9, infer_ms: float = 0.0, on_done=None,
@@ -763,57 +540,77 @@ class FaaSTube:
                                   else None)
 
     # ------------------------------------------------------------ consume -
-    def consume(self, data_id: str, device: str, now: float):
+    def consume(self, data_id: str, device: str, now: float, *,
+                partial: bool = False) -> float:
         """Mark data consumed: release its memory, serve allocations that
-        were waiting for room, and prefetch spilled items back."""
+        were waiting for room, and prefetch spilled items back.
+
+        ``partial=True`` is the overlap contract: the caller has started
+        computing on the landed prefix while reader transfers are still
+        in flight.  The item flips to PARTIAL residency — refused by
+        victim selection, index location "partial" — and the real
+        release is deferred to the last reader's completion
+        (``_reader_done``).  Returns the MB the caller may already read:
+        the smallest landed prefix across in-flight readers, or the full
+        size once nothing is in flight."""
+        if partial and self._readers.get(data_id, 0) > 0:
+            home = self._home.get(data_id, device)
+            it = self.items.get(home, {}).get(data_id)
+            if it is not None:
+                it.set_state(PARTIAL)
+                self._pending_consume[data_id] = device
+                rec = self.index.global_table.get(data_id)
+                if rec is not None:
+                    rec.location = "partial"
+                handles = self._reader_handles.get(data_id)
+                if handles:
+                    return min(h.done_mb for h in handles)
+                return 0.0
+        return self._finish_consume(data_id, device, now)
+
+    def _finish_consume(self, data_id: str, device: str,
+                        now: float) -> float:
+        """The destructive half of consume: drop the item and its index
+        record, free the memory, serve pending allocations, prefetch
+        spilled items back into the freed space."""
+        self._readers.pop(data_id, None)      # late readers: no-op drains
+        self._reader_handles.pop(data_id, None)
+        self._pending_consume.pop(data_id, None)
         home = self._home.pop(data_id, device)
         it = self.items.get(home, {}).pop(data_id, None)
         rec = self.index.global_table.get(data_id)
         self.index.drop(data_id)
         if it is None:
-            return
+            return 0.0
         freed_dev = it.held or home      # RELOADING items hold on their dst
         self._release_item(it, rec, now)
         if not is_device(freed_dev):
-            return
+            return it.size_mb
         self._drain_pending(freed_dev, now)
         if self.cfg.migration != "queue":
-            return
+            return it.size_mb
         space = self._headroom_mb(freed_dev)
         spilled = list(self.items.get(freed_dev, {}).values())
-        for p in self.migrator.pick_prefetch(spilled, space):
+        # need_mb keeps the headroom check block-consistent with
+        # admission: without it an over-headroom prefetch is issued and
+        # fails _try_alloc late (HOST -> RELOADING -> HOST churn)
+        for p in self.migrator.pick_prefetch(spilled, space,
+                                             need_mb=self._mb_needed):
             self._prefetch(p, freed_dev, now)
+        return it.size_mb
 
-    def _prefetch(self, p: StoredItem, device: str, now: float):
-        """Smart-migration prefetch: reload a HOST-state item into freed
-        space before its consumer runs.  The allocation is attributed to
-        the item's producing function (not a synthetic one) and its cost
-        is charged like any other allocation."""
-        prec = self.index.global_table.get(p.data_id)
-        if prec is None:
+    def _reader_done(self, data_id: str, sim):
+        """One in-flight reader of ``data_id`` finished (fetch done or
+        failed).  When the last reader drains and a partial consume was
+        deferred, perform the real release now."""
+        n = self._readers.get(data_id)
+        if n is None:
+            return              # already fully consumed / poisoned
+        if n > 1:
+            self._readers[data_id] = n - 1
             return
-        src_host = p.host or host_of(device)
-        p.set_state(RELOADING)
-        res = self._try_alloc(device, p.func or "prefetch", p.size_mb, now)
-        if res is None:
-            p.set_state(HOST)            # space vanished: stay spilled
-            return
-        buf, cost = res
-        self.stats["alloc_ms"] += cost
-        p.held = device
-        if buf >= 0:
-            prec.buf_id = buf
-
-        def back(sim, tr=None, p=p):
-            self._reload_complete(p, prec, device, sim)
-
-        def lost(sim, err, p=p):
-            # background prefetch failed terminally: fall back to HOST
-            # (the spilled copy is intact unless its node died) and
-            # re-dispatch parked fetches — each pays its own demand
-            # reload from the surviving copy
-            self._reload_failed(p, prec, device, err, redispatch=True)
-        plan = self.engine.compile("prefetch", p.func or "prefetch",
-                                   src_host, device, p.size_mb,
-                                   cls=BACKGROUND)
-        self.engine.submit(plan, now + cost, on_done=back, on_fail=lost)
+        self._readers.pop(data_id, None)
+        self._reader_handles.pop(data_id, None)
+        dev = self._pending_consume.pop(data_id, None)
+        if dev is not None:
+            self._finish_consume(data_id, dev, sim.now)

@@ -3,13 +3,18 @@ table.  Functions query their local table first (shared-memory pipe,
 ~2 us); a miss escalates to the global node (RPC, ~50 us).  Local tables
 sync to the global table on every publish (write-through, async).
 
-A record's ``location`` ("device" | "host") follows the store's location
-state machine and flips via `relocate` only when the migration transfer
-*completes* — while a spill's g2h copy is in flight the record still
-points at the device (the HBM copy is the valid one), and a reload flips
-it back to the destination device only when the h2g copy lands.  Local
-tables share the record object with the global table, so a relocate is
-visible everywhere without an extra RPC (write-through semantics).
+A record's ``location`` ("device" | "host" | "partial") follows the
+store's location state machine and flips via `relocate` only when the
+migration transfer *completes* — while a spill's g2h copy is in flight
+the record still points at the device (the HBM copy is the valid one),
+and a reload flips it back to the destination device only when the h2g
+copy lands.  "partial" is the overlap contract's PARTIAL residency: a
+consumer has partial-consumed the object and is computing on the landed
+prefix while reader transfers are still draining — the bytes are live
+mid-DMA, so the record stays published (and the item unspillable) until
+the facade's deferred release drops it.  Local tables share the record
+object with the global table, so a relocate is visible everywhere
+without an extra RPC (write-through semantics).
 """
 from __future__ import annotations
 
@@ -26,7 +31,7 @@ class DataRecord:
     node: str
     device: str          # "gpu3" | "host" | "chip4_7"
     size_mb: float
-    location: str        # "device" | "host"
+    location: str        # "device" | "host" | "partial"
     buf_id: int = -1
 
 

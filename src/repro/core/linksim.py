@@ -164,6 +164,9 @@ class Transfer:
     stage_key: str = "host"       # which host's ring (rings are per host)
     failed: str = ""              # non-empty: failure cause (fault model)
     parked: bool = False          # launch parked on a full staging ring
+    on_progress: object = None    # callback(sim, landed_mb) at trigger-batch
+    #                               boundaries of the FINAL hop (None: no
+    #                               poke events are ever scheduled)
 
 
 class _Burst:
@@ -746,7 +749,7 @@ class LinkSim:
     def submit(self, func: str, paths, size_mb: float, *,
                t: float | None = None, pin_fresh_mb: float = 0.0,
                alloc_fresh_mb: float = 0.0, ipc_handles: int = 0,
-               on_done=None, unpinned: bool = False,
+               on_done=None, on_progress=None, unpinned: bool = False,
                stage=None, stage_mb: float = 0.0,
                stage_cls: str = FOREGROUND,
                stage_key: str = "host") -> int:
@@ -758,11 +761,17 @@ class LinkSim:
         is parked on the ring's FIFO (``stage.wait``) and fires at the
         grant time — the wait is real latency on the transfer.  The
         reservation is released at transfer completion, waking waiters.
+
+        ``on_progress``: optional ``cb(sim, landed_mb)`` fired at
+        trigger-batch boundaries as chunks land on the FINAL hop (plus
+        at every final-hop service completion).  When None — the default
+        — no poke events are ever scheduled, so the heap event stream is
+        byte-identical to a progress-free run.
         """
         t = self.now if t is None else t
         tid = next(self._tid)
         tr = Transfer(tid, func, size_mb, list(paths), t, on_done=on_done,
-                      unpinned=unpinned)
+                      unpinned=unpinned, on_progress=on_progress)
         # fixed costs charged before the first chunk moves
         if pin_fresh_mb > 0:
             tr.extra_latency += PIN_MS_PER_MB * pin_fresh_mb
@@ -1303,6 +1312,8 @@ class LinkSim:
                        max_avail=max_avail, end=f)
         self._active[link] = svc
         heappush(self._events, (f, next(self._seq), "done", (link, gen)))
+        if tr.on_progress is not None:
+            self._arm_pokes(tr, b, count, fsegs)
 
     # ------------------------------------------------- round coalescing --
     def _plan_round(self, link, t0, max_picks=None):
@@ -1472,6 +1483,9 @@ class LinkSim:
                 part.downstream = d
                 heappush(events,
                          (part.fsegs[0][0], next(self._seq), "arrive", d))
+            elif self.transfers[b.tid].on_progress is not None:
+                self._arm_pokes(self.transfers[b.tid], b, part.count,
+                                part.fsegs)
         self.link_busy_ms[link] = self.link_busy_ms.get(link, 0.0) + busy
         svc = _Round(gen, link, now, end, picks_f, picks_d, order, snap,
                      busy, all_fg, gapless, self._arr_hi)
@@ -1747,6 +1761,52 @@ class LinkSim:
                 d -= c
         dd[func] = d
 
+    # ----------------------------------------------------- progress ------
+    def landed_mb(self, tid: int) -> float:
+        """MB of a transfer physically landed at its destination by now:
+        credited final-hop completions plus the committed prefix of any
+        in-flight final-hop service.  Lazy — reads only live state, so a
+        stale poke after truncation or a re-plan simply re-reads the
+        truth (the committed-prefix invariant makes the count monotone
+        across truncations)."""
+        tr = self.transfers[tid]
+        if tr.t_done >= 0 and not tr.failed:
+            return tr.size_mb
+        n = tr.chunks_done
+        t = self.now + 1e-12
+        for link in self._func_links.get(tr.func, ()):
+            svc = self._active.get(link)
+            if svc is None:
+                continue
+            if type(svc) is _Round:
+                for p in svc.parts:
+                    b = p.burst
+                    if b.tid == tid and b.hop + 2 >= len(b.path):
+                        n += _seg_count_le(p.fsegs, t)
+            else:
+                b = svc.burst
+                if b.tid == tid and b.hop + 2 >= len(b.path):
+                    n += _seg_count_le(svc.fsegs, t)
+        return min(n * self.chunk_mb, tr.size_mb)
+
+    def _fire_progress(self, tid):
+        tr = self.transfers.get(tid)
+        if tr is None or tr.on_progress is None or tr.failed \
+                or tr.t_done >= 0:
+            return
+        tr.on_progress(self, self.landed_mb(tid))
+
+    def _arm_pokes(self, tr, b, count, fsegs):
+        """Schedule trigger-batch progress pokes over one final-hop
+        service's finish schedule.  Pokes are pure wake-ups — they carry
+        no link state, and chunks re-served after a truncation arm fresh
+        pokes of their own."""
+        if b.hop + 2 < len(b.path):
+            return
+        for k in range(BATCH_CHUNKS, count, BATCH_CHUNKS):
+            heappush(self._events,
+                     (_seg_at(fsegs, k - 1), next(self._seq), "poke", b.tid))
+
     def _complete_service(self, t, link, gen):
         svc = self._active.get(link)
         if svc is None or svc.gen != gen:
@@ -1764,6 +1824,8 @@ class LinkSim:
                     tr.chunks_done += part.count
                     if tr.chunks_done >= tr.n_chunks and not tr.failed:
                         self._finish_transfer(tr)
+                    elif tr.on_progress is not None:
+                        self._fire_progress(b.tid)
             self._dispatch(link)
             return
         if svc.coalesced:
@@ -1774,6 +1836,8 @@ class LinkSim:
             tr.chunks_done += svc.count
             if tr.chunks_done >= tr.n_chunks and not tr.failed:
                 self._finish_transfer(tr)
+            elif tr.on_progress is not None:
+                self._fire_progress(b.tid)
         self._dispatch(link)
 
     def _finish_transfer(self, tr):
@@ -1827,6 +1891,8 @@ class LinkSim:
             self._enqueue(link, payload)
         elif kind == "wake":
             self._wake_fire(payload)
+        elif kind == "poke":
+            self._fire_progress(payload)
         else:                         # "call"
             payload(self)
         return True

@@ -8,6 +8,14 @@ passing overlaps other requests' compute — exactly the paper's execution
 model.  Latency split (h2g / g2g / compute) is tracked per request for the
 Fig. 3 / Fig. 12 breakdowns.
 
+With ``TubeConfig.overlap=True`` a stage that opts in (``Stage.partial``)
+additionally overlaps its OWN compute with its residual input transfer:
+``_drain_overlap`` starts the kernel on the first landed trigger batch
+(``consume(partial=True)`` → PARTIAL residency) and advances a pipelined
+compute clock on every progress report — the TensorRT batched-pipelining
+cost model.  ``overlap=False`` (the default) keeps the all-deps-COMPLETE
+gate and an event stream byte-identical to pre-overlap builds.
+
 Lineage recovery (fault model)
 ------------------------------
 The executor registers a crash listener with the tube.  On a node crash
@@ -282,6 +290,10 @@ class WorkflowEngine:
             return
         self.gpu_busy[gpu] = True
         w, rs, s = self.gpu_queue[gpu].popleft()
+        if self.cfg.overlap and s.partial \
+                and (s.deps or s.name in w.input_mb):
+            self._drain_overlap(gpu, w, rs, s)
+            return
 
         def compute():
             sim = self.tube.sim
@@ -321,6 +333,115 @@ class WorkflowEngine:
                 if did and dep_stage.kind == "gpu":
                     self.tube.consume(did, self._gpu_of(w, dep_stage),
                                       sim.now)
+
+    def _consume_partial(self, w: Workflow, rs: RequestState, s):
+        """Overlap twin of ``_consume_fetched``: runs at the stage's
+        FIRST landed trigger batch, before its readers finish.  The same
+        all-consumers guard applies; ``partial=True`` flips the dep to
+        PARTIAL residency (unspillable, release deferred to the last
+        in-flight reader) instead of releasing it outright."""
+        sim = self.tube.sim
+        meta = self._wmeta(w)
+        rs.fetched_stages.add(s.name)
+        for dep, _mb in s.deps:
+            dep_stage = meta.stage[dep]
+            consumers = meta.consumers[dep]
+            if all(c in rs.fetched_stages for c in consumers):
+                did = rs.data_ids.get(dep)
+                if did and dep_stage.kind == "gpu":
+                    self.tube.consume(did, self._gpu_of(w, dep_stage),
+                                      sim.now, partial=True)
+
+    def _drain_overlap(self, gpu: str, w: Workflow, rs: RequestState, s):
+        """Overlap-aware stage execution (``TubeConfig.overlap``).
+
+        Compute starts when the first trigger batch of input lands and
+        pipelines against the residual transfer: every progress report
+        of ``delta`` landed MB extends a pipelined compute clock
+
+            c = max(c, t) + (delta / total_in) * compute_ms
+
+        — the batched-pipelining recurrence: a batch is processed once
+        it has both landed AND the previous batch's compute retired, so
+        a transfer-bound stage finishes ~one batch-compute after its
+        last byte while a compute-bound stage hides the transfer tail
+        entirely.  Total compute charged is exactly ``compute_ms``.
+        Inputs are partial-consumed at first landing; terminal fetch
+        failures poison the group and walk the same lineage recovery as
+        the serial path (the partial consume surfaces as a re-fetch of
+        a PARTIAL or re-produced object)."""
+        sim = self.tube.sim
+        needed = []
+        if s.name in w.input_mb:
+            needed.append((f"r{rs.rid}:in:{s.name}", "h2g",
+                           w.input_mb[s.name]))
+        for dep, mb in s.deps:
+            needed.append((rs.data_ids[dep], "g2g", mb))
+        total_in = sum(mb for _, _, mb in needed)
+        landed = {did: 0.0 for did, _, _ in needed}
+        st = {"c": 0.0, "sum": 0.0, "started": False,
+              "left": len(needed), "dead": False}
+        t0 = sim.now
+
+        def advance(t):
+            cur = sum(landed.values())
+            delta = cur - st["sum"]
+            if delta <= 1e-12:
+                return
+            st["sum"] = cur
+            if not st["started"]:
+                st["started"] = True
+                st["c"] = t
+                self._consume_partial(w, rs, s)
+            st["c"] = max(st["c"], t) + (delta / total_in) * s.compute_ms
+
+        def finished(sim2):
+            if gpu in self.dead_gpus:
+                # crashed mid-pipeline: same re-trigger as the serial
+                # path — consumed inputs surface as fetch errors and
+                # walk the lineage recovery on the remapped GPU
+                if self._budget_ok(rs, s):
+                    rs.started_stages.discard(s.name)
+                    rs.fetched_stages.discard(s.name)
+                    self._try_stage(w, rs, s)
+                else:
+                    self._fail_request(rs)
+                return
+            self.gpu_busy[gpu] = False
+            self._finish_stage(w, rs, s)
+            self._drain(gpu)
+
+        for did, kind, mb in needed:
+            def on_progress(sim2, h, did=did, mb=mb):
+                if st["dead"]:
+                    return
+                if h.done_mb > landed[did]:
+                    landed[did] = min(h.done_mb, mb)
+                    advance(sim2.now)
+
+            def on_ready(sim2, t, did=did, kind=kind, mb=mb):
+                if st["dead"]:
+                    return
+                dt = t - t0
+                if kind == "h2g":
+                    rs.h2g_ms = max(rs.h2g_ms, dt)
+                else:
+                    rs.g2g_ms = max(rs.g2g_ms, dt)
+                landed[did] = mb
+                advance(t)
+                st["left"] -= 1
+                if st["left"] == 0:
+                    sim2.call_at(max(st["c"], t), finished)
+
+            def on_error(sim2, err, did=did):
+                if st["dead"]:
+                    return
+                st["dead"] = True
+                self._fetch_failed(w, rs, s, did, err, gpu)
+            self.tube.fetch(f"r{rs.rid}:{s.name}", did, gpu, sim.now,
+                            slo_ms=rs.slo_ms, infer_ms=s.compute_ms,
+                            on_ready=on_ready, on_error=on_error,
+                            on_progress=on_progress)
 
     def _fetch_then(self, w: Workflow, rs: RequestState, s, then,
                     held: str = ""):

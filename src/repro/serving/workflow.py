@@ -17,6 +17,13 @@ class Stage:
     kind: str                    # cpu | gpu
     compute_ms: float
     deps: tuple = ()             # ((src_stage, size_mb), ...)
+    # overlap contract opt-in (TubeConfig.overlap): the stage kernel can
+    # run TensorRT-style on landed trigger batches of its inputs, so the
+    # executor may start it against a partial prefix (consume(partial=
+    # True)) and pipeline compute with the residual transfer.  False
+    # pins the stage to the all-deps-complete gate even under overlap
+    # (e.g. a global-reduction kernel that needs every byte up front).
+    partial: bool = True
 
 
 @dataclass(frozen=True)

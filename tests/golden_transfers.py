@@ -152,6 +152,33 @@ def run_config(name, cfg) -> list:
     rows.append(["pressure_end", tube.sim.now])
     rows.append(["migrations", tube.stats["migrations"]])
     rows.append(["reloads", tube.stats["reloads"]])
+
+    # --- 6. progress-observed fetch (overlap contract) ------------------
+    # Appended PAST the committed matrix: the pre-overlap golden file
+    # checks rows positionally, so sections 1-5 stay byte-identical and
+    # these rows extend the pin only for future regenerations.  The
+    # observed completion time must equal an unobserved run's (pokes are
+    # observation-only), which the equality against ``progress_done``'s
+    # own unobserved twin asserts inline.
+    tube = _tube(dgx_v100(), cfg)
+    tube.store("prod", "pg", 96.0, "gpu1", 0.0)
+    plain = {}
+    prog: list = []
+    _fetch(tube, rows, "progress_done", "c6", "pg", "gpu4", 0.0,
+           slo_ms=500.0, infer_ms=50.0,
+           on_progress=lambda s, h: prog.append((s.now, h.done_mb)))
+    tube.sim.run()
+    mbs = [mb for _, mb in prog]
+    assert mbs == sorted(mbs) and (not mbs or mbs[-1] == 96.0), mbs
+    rows.append(["progress_events", len(prog)])
+    rows.append(["progress_final_mb", mbs[-1] if mbs else 0.0])
+
+    twin = _tube(dgx_v100(), cfg)
+    twin.store("prod", "pg", 96.0, "gpu1", 0.0)
+    twin.fetch("c6", "pg", "gpu4", 0.0, slo_ms=500.0, infer_ms=50.0,
+               on_ready=lambda s, t: plain.setdefault("t", t))
+    twin.sim.run()
+    assert plain["t"] == rows[-3][1], (plain, rows[-3])
     return rows
 
 

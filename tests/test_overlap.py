@@ -1,0 +1,231 @@
+"""The partial-input stage contract: TransferHandle progress events,
+PARTIAL residency, the executor's overlap cost model, and the
+headroom-checked prefetch path.
+
+Progress events ride LinkSim's trigger-batch pokes — zero heap events
+when nothing subscribes, so ``TubeConfig.overlap=False`` (the default)
+must replay byte-identical to pre-overlap builds (the golden suite pins
+that; here we pin the complementary claim that an ARMED observer does
+not perturb the observed transfer's timing either).
+"""
+import dataclasses
+
+from repro.core.api import FAASTUBE, FaaSTube, TubeConfig
+from repro.core.migration import DEVICE, HOST, PARTIAL
+from repro.core.topology import cluster, dgx_v100
+from repro.core.transfer import RecoveryPolicy
+from repro.serving.executor import run_closed_loop
+from repro.serving.workflow import WORKFLOWS, Stage
+
+DIRECT = dataclasses.replace(FAASTUBE, g2g="direct", name="ft-direct")
+OVERLAP = dataclasses.replace(FAASTUBE, overlap=True, name="ft-ov")
+
+
+def _progress_fetch(tube, did, dst, size_mb, func="c", t=0.0, **kw):
+    """Fetch with a recording progress observer; returns (events, out)
+    where events is [(t, done_mb), ...] and out collects done/err."""
+    events, out = [], {}
+    tube.fetch(func, did, dst, t,
+               on_ready=lambda s, tt: out.setdefault("t", tt),
+               on_error=lambda s, e: out.setdefault("err", e),
+               on_progress=lambda s, h: events.append((s.now, h.done_mb)),
+               **kw)
+    return events, out
+
+
+# ------------------------------------------------- trigger-batch stream --
+
+def test_progress_trigger_batch_ordering():
+    """Single-path, uncontended: progress fires at exact trigger-batch
+    boundaries (BATCH_CHUNKS * chunk_mb = 10 MB) and once at completion
+    with the full (not chunk-rounded) size."""
+    tube = FaaSTube(dgx_v100(), DIRECT)
+    tube.store("p", "a", 96.0, "gpu1", 0.0)
+    events, out = _progress_fetch(tube, "a", "gpu4", 96.0)
+    tube.sim.run()
+    assert "err" not in out and "t" in out
+    mbs = [mb for _, mb in events]
+    assert mbs == [10.0 * k for k in range(1, 10)] + [96.0], mbs
+    ts = [t for t, _ in events]
+    assert ts == sorted(ts) and ts[-1] == out["t"]
+
+
+def test_progress_monotone_under_brownout():
+    """Mid-transfer brownout re-times the in-flight service (committed
+    prefix kept); the landed counter must stay strictly monotone."""
+    tube = FaaSTube(dgx_v100(), FAASTUBE)
+    tube.store("p", "a", 96.0, "gpu1", 0.0)
+    events, out = _progress_fetch(tube, "a", "gpu4", 96.0)
+
+    def brown(sim):
+        for nb in list(tube.topo.neighbors("gpu1")):
+            if tube.topo.bw("gpu1", nb) > 0:
+                tube.brownout("gpu1", nb, 0.5)
+    tube.sim.call_at(1.0, brown)
+    tube.sim.run()
+    assert "err" not in out and "t" in out
+    mbs = [mb for _, mb in events]
+    assert all(b > a for a, b in zip(mbs, mbs[1:])), mbs
+    assert mbs[-1] == 96.0
+
+
+def test_progress_across_striped_to_single_degradation():
+    """A stripe link dies mid-flight; the retry ladder re-plans
+    (striped -> single path) resuming from the landed prefix — progress
+    must stay monotone across the rung boundary and end at size."""
+    tube = FaaSTube(dgx_v100(), FAASTUBE)
+    tube.engine.recovery = RecoveryPolicy()
+    tube.store("p", "a", 128.0, "gpu1", 0.0)
+    events, out = _progress_fetch(tube, "a", "gpu5", 128.0)
+    tube.sim.call_at(0.2, lambda s: tube.fail_link("gpu1", "gpu5"))
+    tube.sim.run()
+    assert "err" not in out and "t" in out
+    assert tube.engine.retries >= 1 and tube.engine.failures == 0
+    mbs = [mb for _, mb in events]
+    assert all(b > a for a, b in zip(mbs, mbs[1:])), mbs
+    assert mbs[-1] == 128.0
+
+
+def test_armed_observer_does_not_perturb_timing():
+    """The poke machinery is observation-only: the same fetch with and
+    without a subscriber completes at the SAME simulated time; the
+    subscriber only adds (poke) heap events."""
+    def run(observe: bool):
+        tube = FaaSTube(dgx_v100(), FAASTUBE)
+        tube.store("p", "a", 96.0, "gpu1", 0.0)
+        out = {}
+        kw = {}
+        if observe:
+            kw["on_progress"] = lambda s, h: None
+        tube.fetch("c", "a", "gpu4", 0.0,
+                   on_ready=lambda s, t: out.setdefault("t", t), **kw)
+        tube.sim.run()
+        return out["t"], tube.sim.n_events
+
+    t_plain, ev_plain = run(False)
+    t_obs, ev_obs = run(True)
+    assert t_obs == t_plain
+    assert ev_obs > ev_plain
+
+
+# --------------------------------------------------- PARTIAL residency ---
+
+def test_partial_consume_defers_release():
+    tube = FaaSTube(dgx_v100(), FAASTUBE)
+    tube.store("p", "a", 96.0, "gpu1", 0.0)
+    got = {}
+
+    def on_prog(sim, h):
+        if "prefix" not in got:
+            got["prefix"] = tube.consume("a", "gpu1", sim.now,
+                                         partial=True)
+            it = tube.items["gpu1"]["a"]
+            got["state"] = it.state
+            got["loc"] = tube.index.global_table["a"].location
+            # mid-consumption items are never spill victims
+            got["victims"] = tube.migrator.pick_victims([it], 9999.0)
+    out = {}
+    tube.fetch("c", "a", "gpu4", 0.0,
+               on_ready=lambda s, t: out.setdefault("t", t),
+               on_progress=on_prog)
+    tube.sim.run()
+    assert "t" in out
+    assert 0.0 < got["prefix"] < 96.0
+    assert got["state"] == PARTIAL and got["loc"] == "partial"
+    assert got["victims"] == []
+    # the last reader drained: the deferred consume performed the real
+    # release — the id is gone everywhere
+    assert "a" not in tube.index.global_table
+    assert "a" not in tube.items.get("gpu1", {})
+    assert not tube._readers and not tube._pending_consume
+
+
+def test_crash_node_poisons_partial_item():
+    """Node crash while a partially-consumed object's reader is in
+    flight: the item is lost wholesale — reader bookkeeping retired,
+    the deferred consume never fires against the poisoned id."""
+    tube = FaaSTube(cluster(2), FAASTUBE)
+    tube.store("p", "x", 192.0, "n0:gpu0", 0.0)
+    consumed = {}
+
+    def on_prog(sim, h):
+        if "v" not in consumed:
+            consumed["v"] = tube.consume("x", "n0:gpu0", sim.now,
+                                         partial=True)
+            tube.crash_node("n0")
+    out = {}
+    tube.fetch("c", "x", "n1:gpu2", 0.0,
+               on_ready=lambda s, t: out.setdefault("t", t),
+               on_error=lambda s, e: out.setdefault("err", e),
+               on_progress=on_prog)
+    tube.sim.run()
+    assert "err" in out and "t" not in out
+    assert tube.stats["lost"] >= 1
+    assert "x" not in tube.index.global_table
+    assert not tube._readers and not tube._pending_consume \
+        and not tube._reader_handles
+
+
+# ------------------------------------------- headroom-checked prefetch ---
+
+def test_prefetch_respects_block_rounded_headroom():
+    """Satellite regression: a 5 MB spilled item block-rounds to 6 MB;
+    with exactly 5 MB of headroom the prefetch must NOT be issued (it
+    used to be submitted and then fail admission late, churning the
+    item HOST -> RELOADING -> HOST)."""
+    cfg = dataclasses.replace(FAASTUBE, store_cap_mb=97.0)
+    tube = FaaSTube(dgx_v100(), cfg)
+    tube.store("p1", "odd", 5.0, "gpu0", 0.0, consumer_pos=9)
+    tube.sim.run()
+    tube.store("p2", "big", 92.0, "gpu0", 1.0, consumer_pos=1)
+    tube.sim.run()      # spills "odd" (5 MB raw, 6 MB in blocks)
+    odd = tube.items["gpu0"]["odd"]
+    assert odd.state == HOST
+    tube.store("p3", "tiny", 1.0, "gpu0", tube.sim.now, consumer_pos=2)
+    tube.sim.run()
+    # freeing tiny leaves headroom 97 - 92 = 5 MB: raw size fits,
+    # block-rounded footprint does not — no prefetch may be issued
+    tube.consume("tiny", "gpu0", tube.sim.now)
+    tube.sim.run()
+    assert odd.state == HOST
+    assert tube.migrator.reloads == 0
+    # positive control: freeing the big item makes real room
+    tube.consume("big", "gpu0", tube.sim.now)
+    tube.sim.run()
+    assert tube.migrator.reloads == 1
+    assert odd.state == DEVICE
+
+
+# ------------------------------------------------- executor cost model ---
+
+def test_overlap_executor_faster_and_complete():
+    from benchmarks.fig03_motivation import scale_workflow
+    w = dataclasses.replace(scale_workflow(WORKFLOWS["traffic"], 4.0),
+                            name="traffic")
+    serial = run_closed_loop(dgx_v100, FAASTUBE, w, n_requests=6)
+    over = run_closed_loop(dgx_v100, OVERLAP, w, n_requests=6)
+    for eng in (serial, over):
+        assert len(eng.completed) == 6 and not eng.failed
+    mk = lambda e: max(r.t_done for r in e.completed)       # noqa: E731
+    assert mk(over) < mk(serial)
+    # total compute charged is exactly the stage sum in both models
+    assert over.completed[0].compute_ms == serial.completed[0].compute_ms
+
+
+def test_stage_partial_false_pins_serial_gate():
+    """A stage that opts out (Stage.partial=False) keeps the
+    all-deps-complete gate even under TubeConfig.overlap=True."""
+    w = WORKFLOWS["social"]
+    w_pinned = dataclasses.replace(
+        w, stages=tuple(dataclasses.replace(s, partial=False)
+                        for s in w.stages))
+    serial = run_closed_loop(dgx_v100, FAASTUBE, w, n_requests=4)
+    pinned = run_closed_loop(dgx_v100, OVERLAP, w_pinned, n_requests=4)
+    assert [r.t_done for r in pinned.completed] \
+        == [r.t_done for r in serial.completed]
+
+
+def test_overlap_defaults_off():
+    assert TubeConfig().overlap is False
+    assert FAASTUBE.overlap is False
+    assert Stage("s", "gpu", 1.0).partial is True
