@@ -3,6 +3,14 @@ committed baseline and FAIL on drift (CI used to only upload artifacts,
 so a silently shifted band was invisible until someone read the JSON).
 
     python -m benchmarks.band_gate BASELINE FRESH [--float-tol PCT]
+    python -m benchmarks.band_gate --baseline-dir DIR FRESH... [--float-tol PCT]
+
+The second form gates N regenerated reports in one invocation: each
+FRESH file is diffed against ``DIR/<basename>``, every file is checked
+even after the first drift (the full per-field old -> new diff prints
+for each), and the exit code aggregates across all of them.  A FRESH
+file with no baseline in DIR fails the gate — that is exactly the
+"new BENCH file silently left out of the band diff" hole this closes.
 
 The simulator is deterministic (seeded arrival traces, fixed-order event
 heap), so everything except wall-clock measurements must reproduce
@@ -22,6 +30,7 @@ the old baseline lacks.  Only a *changed value* is a regression.
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 #: machine-dependent measurements — never compared
@@ -81,6 +90,24 @@ def gate(baseline_path: str, fresh_path: str,
     return 1 if n else 0
 
 
+def gate_dir(baseline_dir: str, fresh_paths: list[str],
+             float_tol: float = 1.0) -> int:
+    """Gate every FRESH report against ``baseline_dir/<basename>``;
+    never stops at the first drifted file."""
+    rc = 0
+    for fresh in fresh_paths:
+        baseline = os.path.join(baseline_dir, os.path.basename(fresh))
+        if not os.path.exists(baseline):
+            print(f"band_gate,FAIL,{fresh},no baseline in {baseline_dir},")
+            rc = 1
+            continue
+        rc |= gate(baseline, fresh, float_tol)
+    n = len(fresh_paths)
+    print(f"band_gate,{'FAIL' if rc else 'ok'},{baseline_dir},"
+          f"{n} reports gated,")
+    return rc
+
+
 def main(argv=None) -> int:
     args = list(argv if argv is not None else sys.argv[1:])
     float_tol = 1.0
@@ -88,6 +115,14 @@ def main(argv=None) -> int:
         i = args.index("--float-tol")
         float_tol = float(args[i + 1])
         del args[i:i + 2]
+    if "--baseline-dir" in args:
+        i = args.index("--baseline-dir")
+        base_dir = args[i + 1]
+        del args[i:i + 2]
+        if not args:
+            print(__doc__, file=sys.stderr)
+            return 2
+        return gate_dir(base_dir, args, float_tol)
     if len(args) != 2:
         print(__doc__, file=sys.stderr)
         return 2

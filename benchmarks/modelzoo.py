@@ -1,0 +1,257 @@
+"""Model-zoo scenario: hundreds of checkpoints swap-served on the
+64-node fleet (Torpor/FaaSwap direction, serving/modelcache.py).
+
+Each serving GPU hosts a zoo slice whose checkpoints (REAL shard sizes
+from the model stack's PSpec trees — whisper, minicpm, qwen2-vl, xlstm,
+nemotron, gemma3, dbrx, jamba, sharded at their tensor/expert-parallel
+degree) total ~2x its store capacity, so every arm must swap.  A seeded
+Zipf-popular, bursty request trace replays IDENTICALLY against four
+arms:
+
+  slo       the serving tier as shipped: SLO-aware victims (queue-depth
+            hard pin + popularity/slack score) + layer-granular
+            pipelined reload through cut-through staging
+  lru       same tier, LRU victims (the classic model-cache baseline)
+  storefwd  SLO victims but whole-model store-forward reloads — no
+            trigger-batch progress events, first token waits for the
+            full checkpoint
+  keepwarm  every model DEVICE-resident forever (no swapping at all) —
+            the GPU-hours cost ceiling
+
+Bands (asserted here, gated via band_gate in CI):
+  * slo cuts cold-start p99 >= 15% vs lru at equal memory
+  * pipelined reload cuts median cold first-token latency >= 20% vs
+    storefwd (median: the tail is queue wait, which both arms share)
+  * the swap tier's GPU MB*s residency integral is a small fraction of
+    keepwarm's (keepwarm serves zero cold starts — that is what it
+    buys for the memory)
+
+``python -m benchmarks.modelzoo smoke`` runs an 8-node edition inside a
+30 s budget (the CI smoke gate); the full 64-node sweep maintains the
+committed baseline in ``BENCH_modelzoo.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import random
+import statistics
+import sys
+import time
+
+from benchmarks.common import emit, p99
+from repro.core.api import FAASTUBE, FaaSTube
+from repro.core.topology import cluster, dgx_v100
+from repro.core.transfer import STORE_FORWARD, host_of, node_of
+from repro.serving.modelcache import ModelCache, profile_from_arch
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_modelzoo.json")
+SEED = 0
+ZIPF_S = 1.1
+
+#: the zoo: (arch, tensor/expert-parallel degree) — tp is chosen so the
+#: per-GPU shard is servable (giant MoE/hybrid checkpoints shard across
+#: expert+tensor ranks; qwen2-72b/grok-scale dense models stay multi-
+#: node-only and out of the single-GPU swap tier)
+ZOO = [
+    ("whisper-medium", 1),        # 0.8 GB shard
+    ("minicpm-2b", 4),            # 1.4 GB
+    ("qwen2-vl-2b", 2),           # 1.8 GB
+    ("xlstm-1.3b", 4),            # 1.8 GB
+    ("nemotron-4-15b", 8),        # 3.9 GB
+    ("gemma3-27b", 16),           # 3.4 GB
+    ("dbrx-132b", 64),            # 4.1 GB
+    ("jamba-1.5-large-398b", 256),  # 3.1 GB
+]
+
+FULL = dict(n_nodes=64, models_per_gpu=6, n_requests=2560,
+            horizon_ms=14_000.0)
+SMOKE = dict(n_nodes=8, models_per_gpu=6, n_requests=320,
+             horizon_ms=14_000.0)
+#: prefill cost override for the zoo: short interactive prompts (~1k
+#: tokens at ~30% MFU) make first-token latency TRANSFER-bound — the
+#: regime the swap tier exists for (the modelcache default models 2k-
+#: token prompts, where compute hides most of the reload)
+ZOO_PREFILL_MS_PER_MB = 0.025
+STORE_CAP_MB = 7_000.0            # serving GPU budget for checkpoints
+HOST_RING_MB = 6_000.0            # pinned checkpoint cache per node
+KEEPWARM_CAP_MB = 64_000.0        # always-resident arm: cap is a no-op
+WALL_BUDGET_S = 300.0
+SMOKE_BUDGET_S = 30.0
+
+P99_CUT_VS_LRU = 0.15             # slo cold p99 >= 15% under lru's
+TTFT_CUT_VS_STOREFWD = 0.20      # pipelined median cold TTFT cut
+KEEPWARM_RESIDENCY_RATIO = 0.5   # swap tier uses < half the GPU MB*s
+
+
+def build_zoo(n_nodes: int, models_per_gpu: int):
+    """One serving GPU per node; each gets ``models_per_gpu`` profiles
+    cycling the ZOO so every slice mixes small/large checkpoints and
+    oversubscribes its store ~2x.  Profiles are computed once per
+    (arch, tp) and shared across the fleet's model instances."""
+    base = {at: profile_from_arch(
+        at[0], tp=at[1], prefill_ms_per_mb=ZOO_PREFILL_MS_PER_MB)
+        for at in ZOO}
+    gpus = [f"n{k}:gpu0" for k in range(n_nodes)]
+    placements = []                  # (profile, gpu)
+    for g, gpu in enumerate(gpus):
+        for i in range(models_per_gpu):
+            arch, tp = ZOO[(g * models_per_gpu + i) % len(ZOO)]
+            p = base[(arch, tp)]
+            placements.append((dataclasses.replace(
+                p, name=f"{arch}-tp{tp}.g{g}.{i}"), gpu))
+    return gpus, placements
+
+
+def gen_trace(placements, n_requests: int, horizon_ms: float,
+              seed: int = SEED):
+    """Seeded Zipf-popular, bursty arrivals — identical for every arm.
+
+    The fleet front-end router balances aggregate load, so every node
+    gets an equal request budget; what routing cannot remove is the
+    popularity skew WITHIN a node's zoo slice, so each node's models get
+    Zipf-ranked by a seeded shuffle, and a third of the requests arrive
+    as short same-model bursts: the queue skew the SLO-aware policy
+    exists for.  Per-node dynamics are scale-invariant — the 64-node
+    sweep samples 8x as many hot-node tails as the smoke edition."""
+    rng = random.Random(seed)
+    by_gpu: dict = {}
+    for p, gpu in placements:
+        by_gpu.setdefault(gpu, []).append(p.name)
+    per_node = n_requests // len(by_gpu)
+    events = []
+    for _gpu, names in by_gpu.items():
+        rng.shuffle(names)
+        weights = [1.0 / (r + 1) ** ZIPF_S for r in range(len(names))]
+        for _ in range(per_node):
+            t = rng.uniform(0.0, horizon_ms)
+            name = rng.choices(names, weights=weights)[0]
+            events.append((t, name))
+            if rng.random() < 0.35:  # burst: 1-3 fast follow-ups
+                for j in range(rng.randint(1, 3)):
+                    events.append((t + 2.0 * (j + 1), name))
+    events.sort()
+    return events
+
+
+def run_arm(arm: str, scale: dict):
+    """Replay the trace against one configuration; returns metrics."""
+    n_nodes = scale["n_nodes"]
+    topo = cluster(n_nodes, base=dgx_v100)
+    keepwarm = arm == "keepwarm"
+    cap = KEEPWARM_CAP_MB if keepwarm else STORE_CAP_MB
+    cfg = dataclasses.replace(
+        FAASTUBE, store_cap_mb=cap,
+        staging=STORE_FORWARD if arm == "storefwd" else FAASTUBE.staging)
+    tube = FaaSTube(topo, cfg)
+    _gpus, placements = build_zoo(n_nodes, scale["models_per_gpu"])
+    # the checkpoint registry is sharded per 8-node cell (one registry
+    # leader per rack): cold object-path reloads contend on their
+    # cell's registry NIC, not on one fleet-wide node — the 64-node
+    # sweep is eight racks with the smoke edition's dynamics each
+    registry = {}
+    for p, gpu in placements:
+        k = int(node_of(gpu)[1:])
+        registry[p.name] = host_of(f"n{k - k % 8}:gpu0")
+    mc = ModelCache(tube,
+                    policy="lru" if arm == "lru" else "slo",
+                    pipelined=arm != "storefwd",
+                    host_cache_mb=HOST_RING_MB,
+                    registry_host=registry.__getitem__)
+    # identical prestage decisions across arms: each node's pinned ring
+    # admits zoo slices in deployment order until it fills; the rest
+    # start registry-backed (EVICTED) and earn slots on first demotion
+    for p, gpu in placements:
+        mc.register(p, gpu, 0.0, resident=keepwarm)
+
+    trace = gen_trace(placements, scale["n_requests"],
+                      scale["horizon_ms"])
+    for t, name in trace:
+        tube.sim.call_at(t, lambda sim, n=name, t=t: mc.request(n, t))
+    tube.sim.run()
+    horizon = tube.sim.now
+
+    cold = [ms for (_t, ms, c) in mc.ttft if c]
+    warm = [ms for (_t, ms, c) in mc.ttft if not c]
+    n = len(mc.ttft)
+    assert n == len(trace), (arm, n, len(trace))
+    return {
+        "requests": n,
+        "cold": len(cold),
+        "warm": len(warm),
+        "cold_p99_ms": round(p99(cold), 3) if cold else 0.0,
+        "cold_p50_ms": round(statistics.median(cold), 3) if cold else 0.0,
+        "cold_mean_ms": round(sum(cold) / len(cold), 3) if cold else 0.0,
+        "overall_p99_ms": round(p99([ms for (_t, ms, _c) in mc.ttft]), 3),
+        "evictions": mc.stats["evictions"],
+        "evicted_with_queue": mc.stats["evicted_with_queue"],
+        "host_hits": mc.stats["host_hits"],
+        "cold_misses": mc.stats["cold_misses"],
+        "gpu_mb_s": round(mc.gpu_mb_s(horizon), 1),
+        "events": tube.sim.n_events,
+    }
+
+
+def main(argv=None) -> dict:
+    args = list(argv if argv is not None else sys.argv[1:])
+    smoke = "smoke" in args
+    scale = SMOKE if smoke else FULL
+    tag = "smoke" if smoke else "full"
+    t0 = time.time()
+
+    arms = {arm: run_arm(arm, scale)
+            for arm in ("slo", "lru", "storefwd", "keepwarm")}
+    section = {"arms": arms, "n_models":
+               scale["n_nodes"] * scale["models_per_gpu"],
+               "store_cap_mb": STORE_CAP_MB, "host_ring_mb": HOST_RING_MB}
+
+    # merge into any existing report so smoke regeneration (CI) updates
+    # its section in place and the band gate still diffs the full one
+    report: dict = {"schema": 1}
+    if os.path.exists(DEFAULT_OUT):
+        with open(DEFAULT_OUT) as f:
+            report.update(json.load(f))
+    report[tag] = section
+    wall = time.time() - t0
+    report["wall_s"] = round(wall, 1)
+    with open(DEFAULT_OUT, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+
+    slo, lru = arms["slo"], arms["lru"]
+    sf, kw = arms["storefwd"], arms["keepwarm"]
+    p99_cut = 1.0 - slo["cold_p99_ms"] / lru["cold_p99_ms"]
+    ttft_cut = 1.0 - slo["cold_p50_ms"] / sf["cold_p50_ms"]
+    residency = slo["gpu_mb_s"] / kw["gpu_mb_s"]
+    emit("modelzoo", "slo.cold_p99", slo["cold_p99_ms"], "ms",
+         f"{slo['cold']} cold / {slo['requests']} reqs ({tag})")
+    emit("modelzoo", "lru.cold_p99", lru["cold_p99_ms"], "ms",
+         f"slo cuts {100 * p99_cut:.1f}% (band >= {100 * P99_CUT_VS_LRU:.0f}%)")
+    emit("modelzoo", "storefwd.cold_p50", sf["cold_p50_ms"], "ms",
+         f"pipelined cuts {100 * ttft_cut:.1f}% "
+         f"(band >= {100 * TTFT_CUT_VS_STOREFWD:.0f}%)")
+    emit("modelzoo", "slo.gpu_mb_s", slo["gpu_mb_s"], "MB*s",
+         f"{100 * residency:.1f}% of keepwarm's {kw['gpu_mb_s']:.0f}")
+    emit("modelzoo", "wall_clock", wall, "s",
+         f"budget: <{SMOKE_BUDGET_S if smoke else WALL_BUDGET_S:.0f}s ({tag})")
+
+    # acceptance bands
+    assert p99_cut >= P99_CUT_VS_LRU, \
+        f"SLO-aware swap lost its cold-p99 edge vs LRU: {slo} vs {lru}"
+    assert ttft_cut >= TTFT_CUT_VS_STOREFWD, \
+        f"pipelined reload lost its first-token edge: {slo} vs {sf}"
+    assert kw["cold"] == 0, f"keep-warm arm served cold starts: {kw}"
+    assert residency <= KEEPWARM_RESIDENCY_RATIO, \
+        f"swap tier no longer saves keep-warm GPU-hours: {slo} vs {kw}"
+    for name, a in arms.items():
+        assert a["requests"] == slo["requests"], (name, a)
+    if smoke:
+        assert wall < SMOKE_BUDGET_S, f"modelzoo smoke too slow: {wall:.1f}s"
+    else:
+        assert wall < WALL_BUDGET_S, f"modelzoo sweep too slow: {wall:.1f}s"
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,7 @@ EXTRAS = [
     "fleet",        # 512 concurrent workflows on a 16-node cluster
     "megafleet",    # 4096 concurrent workflows on a 64-node cluster
     "memstress",    # store_cap sweep under bursty memory pressure
+    "modelzoo",     # checkpoint swap-serving: SLO vs LRU vs keep-warm
     "isoperf",      # fg SLO attainment vs bg migration pressure
     "overlap",      # compute/transfer overlap on/off per workflow class
 ]

@@ -8,6 +8,7 @@
 3. The TPU adaptation: the same pathfinder striping a reshard across
    edge-disjoint ICI paths on a v5e torus.
 4. A reduced LM through the serving engine (real JAX compute on CPU).
+5. The model-swapping serving tier: checkpoint cache + SLO-aware swap.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -78,6 +79,39 @@ def demo_torus():
           f"route ({agg / 50:.1f}x)")
 
 
+def demo_modelzoo():
+    print("\n=== 5. Model-swapping serving tier (checkpoint cache) ===")
+    # four checkpoints share one serving GPU that only fits two: the
+    # cache swaps via zero-copy eviction + layer-granular pipelined
+    # reload, and the victim policy decides who pays the cold start
+    import random
+
+    from repro.serving.modelcache import ModelCache, make_profile
+
+    rng = random.Random(9)
+    trace = []
+    for _ in range(12):
+        t, name = rng.uniform(0.0, 400.0), f"m{rng.randint(0, 3)}"
+        trace.append((t, name))
+        if rng.random() < 0.5:        # bursts build the queue skew
+            trace += [(t + 2.0 * (j + 1), name) for j in range(2)]
+    trace.sort()
+    for policy in ("slo", "lru"):
+        cfg = dataclasses.replace(FAASTUBE, store_cap_mb=700.0)
+        tube = FaaSTube(dgx_v100(), cfg)
+        mc = ModelCache(tube, policy=policy)
+        for i in range(4):
+            mc.register(make_profile(f"m{i}", "synth", [40.0] * 8),
+                        "gpu0", 0.0)
+        for t, name in trace:
+            tube.sim.call_at(t, lambda sim, n=name, t=t: mc.request(n, t))
+        tube.sim.run()
+        cold = sorted(ms for (_t, ms, c) in mc.ttft if c)
+        p99 = cold[max(0, int(len(cold) * 0.99) - 1)]
+        print(f"  {policy:3s} victims: cold p99 {p99:7.2f} ms over "
+              f"{len(cold)} cold starts, {mc.stats['evictions']} evictions")
+
+
 def demo_engine():
     print("\n=== 4. Serving a reduced LM (real compute) ===")
     from repro.configs import get_arch
@@ -101,3 +135,4 @@ if __name__ == "__main__":
     demo_overlap()
     demo_torus()
     demo_engine()
+    demo_modelzoo()

@@ -375,6 +375,30 @@ class FaaSTube(ChaosMixin, MigrationMixin):
         self._reserve(device, func, size_mb, now, grant)
         return now   # lower bound; true ready time arrives via on_ready
 
+    def adopt_host_object(self, func: str, data_id: str, size_mb: float,
+                          host: str, now: float, *,
+                          home: str | None = None) -> StoredItem:
+        """Register bytes that already exist on ``host`` (a deployed
+        model checkpoint, a pre-staged dataset) without moving them.
+
+        The item enters the store in HOST state exactly as if a spill
+        had just completed, so a later fetch to a device takes the
+        ordinary demand-reload path (``_movement`` sees spilled + device
+        dst -> "reload") with no special cases.  ``home`` names the
+        store the item is indexed under — pass the device that will
+        serve it so the eventual ``_reload_complete`` rehome is the
+        identity; defaults to ``host`` itself.
+        """
+        home = home or host
+        self._pool(home)
+        item = StoredItem(data_id, size_mb, now, now, func=func,
+                          on_host=True, host=host)
+        self.items[home][data_id] = item
+        self._home[data_id] = home
+        rec = DataRecord(data_id, node_of(host), host, size_mb, "host", -1)
+        self.index.publish(rec)
+        return item
+
     # --------------------------------------------------------------- fetch -
     def _movement(self, src: str, dst: str, spilled: bool) -> str:
         """Fig. 8 dispatch: resolve locations to a plan kind."""
