@@ -93,6 +93,8 @@ class PathFinder:
         self._transit_prefixes = tuple(self.transit.split(","))
         self._adj_cache: dict = {}    # (node, scope) -> transit neighbors
         self._adj_version = -1
+        self._spaths_cache: dict = {}  # (src,dst,scope) -> simple paths
+        self._spaths_version = -1
         #: True once fail_link has performed surgery — only then can a
         #: node subgraph be disconnected and a scoped miss need the
         #: cluster-wide re-check
@@ -310,9 +312,87 @@ class PathFinder:
             self._adj_cache[key] = lst
         return lst
 
+    def _scoped_mids(self, src, dst, scope):
+        """Midpoints of every 2-hop transit path src -> mid -> dst in
+        one node scope, cached on `Topology.version`.  Covers both
+        transit and device endpoints: the heap search steps onto a
+        non-transit dst exactly when the (mid, dst) edge exists, which
+        is the same membership test."""
+        if self._spaths_version != self.topo.version:
+            self._spaths_cache.clear()
+            self._spaths_version = self.topo.version
+        key = (src, dst, scope)
+        mids = self._spaths_cache.get(key)
+        if mids is None:
+            edges = self.topo.edges
+            mids = tuple(m for m in self._transit_adj(src, scope)
+                         if m != dst and (m, dst) in edges)
+            self._spaths_cache[key] = mids
+        return mids
+
+    def _scoped_query(self, src, dst, scope, free_only, avoid_edges,
+                      ignore_load):
+        """Closed-form answer for the minimal-hop intra-node queries
+        that dominate fleet traffic, bypassing the heap search:
+
+          * a usable direct edge is the unique 1-hop path, which beats
+            every >=2-hop candidate on the (hops, -bw) pop order;
+          * otherwise, if ANY 2-hop path passes the residual/free/avoid
+            filters, the search's answer is exactly the usable 2-hop
+            candidate minimizing (-bottleneck, path) — every 1-hop heap
+            entry pops before the first 2-hop entry, so all 2-hop dst
+            entries are on the heap by then and longer paths never win.
+
+        Returns ``NotImplemented`` when no minimal-hop candidate is
+        usable (the search may route around through 3+ hops) — the
+        caller falls through to the real Dijkstra."""
+        if src == dst:
+            return (src,), 1e18       # the search's immediate first pop
+        edges = self.topo.edges
+        residual = self.residual
+        users = self.users
+        e = (src, dst)
+        if edges.get(e, 0.0) > 0.0 and e not in avoid_edges:
+            if ignore_load:
+                return (src, dst), edges[e]
+            bw = residual.get(e, 0.0)
+            if bw > 1e-9 and not (free_only and users.get(e)):
+                return (src, dst), bw
+        best = None
+        for m in self._scoped_mids(src, dst, scope):
+            bw = 1e18
+            for pe in ((src, m), (m, dst)):
+                if pe in avoid_edges:
+                    bw = 0.0
+                    break
+                if ignore_load:
+                    w = edges.get(pe, 0.0)
+                    if w <= 0.0:
+                        bw = 0.0
+                        break
+                else:
+                    w = residual.get(pe, 0.0)
+                    if w <= 1e-9 or (free_only and users.get(pe)):
+                        bw = 0.0
+                        break
+                if w < bw:
+                    bw = w
+            if bw > 0.0:
+                k = (-bw, (src, m, dst))
+                if best is None or k < best:
+                    best = k
+        if best is None:
+            return NotImplemented
+        return best[1], -best[0]
+
     def _dijkstra(self, src, dst, *, free_only: bool,
                   avoid_edges=frozenset(), ignore_load: bool = False,
                   scope=None):
+        if scope is not None:
+            r = self._scoped_query(src, dst, scope, free_only,
+                                   avoid_edges, ignore_load)
+            if r is not NotImplemented:
+                return r
         heap = [(0, -1e18, src, (src,))]
         seen = {}
         edges = self.topo.edges
@@ -354,10 +434,28 @@ class PathFinder:
         return None, 0.0
 
     def _egress(self, g) -> float:
-        return sum(self.residual.get((g, nb), 0.0) for nb in self.topo.neighbors(g))
+        """Spare bandwidth out of g — callers only threshold it against
+        1e-9, so the sum short-circuits once it is unambiguously
+        positive (a cluster host has ~N mesh edges; summing them all per
+        select_paths probe was a top fleet hotspot).  Residual dust from
+        alloc/release float error is bounded far below 1e-3, so an early
+        exit can never flip the threshold comparison."""
+        s = 0.0
+        rget = self.residual.get
+        for nb in self.topo.neighbors(g):
+            s += rget((g, nb), 0.0)
+            if s > 1e-3:
+                break
+        return s
 
     def _ingress(self, g) -> float:
-        return sum(self.residual.get((nb, g), 0.0) for nb in self.topo.neighbors(g))
+        s = 0.0
+        rget = self.residual.get
+        for nb in self.topo.neighbors(g):
+            s += rget((nb, g), 0.0)
+            if s > 1e-3:
+                break
+        return s
 
     # -------------------------------------------------------- Algorithm 1 -
     def select_paths(self, func: str, src: str, dst: str,
