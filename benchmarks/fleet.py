@@ -72,6 +72,40 @@ def run_fleet(cfg, seed: int = 0, *, n_nodes: int = N_NODES,
     return eng
 
 
+def build_plan(cfg, seed: int = 0, *, n_nodes: int = N_NODES,
+               n_apps: int = N_APPS, reqs_per_app: int = REQS_PER_APP,
+               scale_ms: float = 40.0):
+    """The fleet trace as a picklable ShardPlan for core/shard.py."""
+    from repro.core.shard import ShardPlan
+    topo = cluster(n_nodes, base=dgx_v100)
+    apps, placements = build_fleet(topo, n_nodes, n_apps)
+    arr = {w.name: arrivals("bursty", reqs_per_app, scale_ms, seed + k)
+           for k, w in enumerate(apps)}
+    return ShardPlan(cfg=cfg, n_nodes=n_nodes, apps=apps,
+                     placements=placements, arrivals=arr, seed=seed)
+
+
+def run_fleet_sharded(cfg, seed: int = 0, *, workers: int = 0,
+                      n_nodes: int = N_NODES, n_apps: int = N_APPS,
+                      reqs_per_app: int = REQS_PER_APP,
+                      scale_ms: float = 40.0):
+    """Fleet trace on the sharded engine.
+
+    ``workers=0``: deterministic single-process mode, byte-identical to
+    `run_fleet` (per-shard heaps, global pop order).  ``workers=N``:
+    conservative-lookahead BSP over N worker processes.  Returns a
+    ShardResult either way.
+    """
+    from repro.core.shard import ShardedTube
+    plan = build_plan(cfg, seed, n_nodes=n_nodes, n_apps=n_apps,
+                      reqs_per_app=reqs_per_app, scale_ms=scale_ms)
+    res = ShardedTube(plan, workers=workers).run()
+    n_sub = n_apps * reqs_per_app
+    assert len(res.completed) == n_sub, \
+        (cfg.name, workers, len(res.completed), len(res.failed), n_sub)
+    return res
+
+
 def main():
     from repro.core import linksim as L
     t0 = time.time()

@@ -82,6 +82,42 @@ def micro() -> dict:
     }
 
 
+def shard_scaling() -> dict:
+    """Shard-parallel scaling curve: the megafleet faastube arm on the
+    sharded engine at workers in {1, 2, 4}, plus the byte-identical
+    single-process mode as the reference.
+
+    ``events`` and ``rounds`` are worker-count-invariant and band-gated;
+    ``wall_s``/``events_per_sec`` are machine facts (SKIP_KEYS) — THE
+    wall-clock truth for this engine on this box, which is what retires
+    the old "events_per_sec varies with machine phase" caveat: scaling
+    claims now come from this committed curve, not from eyeballing one
+    noisy number.  On a single-scheduled-core container the worker
+    curve is flat-to-slower (BSP round overhead, no real parallelism);
+    on a multi-core box the node phase divides across workers.
+    """
+    from benchmarks.fleet import run_fleet_sharded
+    from benchmarks.megafleet import N_APPS, N_NODES, REQS_PER_APP
+    from repro.core.api import SYSTEMS
+    curve = {}
+    for nw in (0, 1, 2, 4):
+        t0 = time.perf_counter()
+        res = run_fleet_sharded(SYSTEMS["faastube"], workers=nw,
+                                n_nodes=N_NODES, n_apps=N_APPS,
+                                reqs_per_app=REQS_PER_APP)
+        wall = time.perf_counter() - t0
+        key = "single" if nw == 0 else f"workers_{nw}"
+        curve[key] = {
+            "wall_s": round(wall, 3),
+            "events": res.n_events,
+            "events_per_sec": round(res.n_events / max(wall, 1e-9)),
+            "rounds": res.rounds,
+        }
+        print(f"simperf,shard.{key},{wall:.3f},s,"
+              f"{res.n_events} events, {res.rounds} rounds")
+    return curve
+
+
 def main(argv=None) -> int:
     args = list(argv if argv is not None else sys.argv[1:])
     out_path = DEFAULT_OUT
@@ -95,7 +131,8 @@ def main(argv=None) -> int:
         from benchmarks.run import BENCHES
         names = list(BENCHES)
 
-    report = {"schema": 1, "micro": micro(), "figures": {}}
+    report = {"schema": 1, "micro": micro(), "figures": {},
+              "shard_scaling": shard_scaling()}
     failed = []
     t_total = time.perf_counter()
     for name in names:

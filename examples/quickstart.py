@@ -7,8 +7,11 @@
    ``TubeConfig.overlap`` pipelining stage compute against transfers.
 3. The TPU adaptation: the same pathfinder striping a reshard across
    edge-disjoint ICI paths on a v5e torus.
-4. A reduced LM through the serving engine (real JAX compute on CPU).
-5. The model-swapping serving tier: checkpoint cache + SLO-aware swap.
+4. Fleet-scale parallel simulation: the same trace on the sharded
+   engine at ``workers=0`` (byte-identical reference) and ``workers=2``
+   (conservative-lookahead BSP across processes).
+5. A reduced LM through the serving engine (real JAX compute on CPU).
+6. The model-swapping serving tier: checkpoint cache + SLO-aware swap.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -80,7 +83,7 @@ def demo_torus():
 
 
 def demo_modelzoo():
-    print("\n=== 5. Model-swapping serving tier (checkpoint cache) ===")
+    print("\n=== 6. Model-swapping serving tier (checkpoint cache) ===")
     # four checkpoints share one serving GPU that only fits two: the
     # cache swaps via zero-copy eviction + layer-granular pipelined
     # reload, and the victim policy decides who pays the cold start
@@ -113,7 +116,7 @@ def demo_modelzoo():
 
 
 def demo_engine():
-    print("\n=== 4. Serving a reduced LM (real compute) ===")
+    print("\n=== 5. Serving a reduced LM (real compute) ===")
     from repro.configs import get_arch
     from repro.configs.base import ShapeSpec
     from repro.models import model as M
@@ -130,9 +133,34 @@ def demo_engine():
     print(f"  generated token ids: {toks.tolist()}")
 
 
+def demo_sharded():
+    print("\n=== 4. Sharded parallel simulation (workers=N) ===")
+    # the same 4-node fleet trace through both ShardedTube modes:
+    # workers=0 rotates per-node shards by next-event-time and replays
+    # the global heap byte-identically; workers=2 forks the node shards
+    # across processes and advances them in conservative-lookahead BSP
+    # rounds (the mesh shard stays in the driver for exact host-mesh
+    # contention) — deterministic and worker-count-invariant, with
+    # straddle workflows crossing shards via staged handoff.  Runs
+    # before any real JAX compute: the workers fork, and forking a
+    # process that already started JAX's thread pools can deadlock
+    from benchmarks.fleet import build_plan
+    from repro.core.shard import ShardedTube
+
+    plan = build_plan(FAASTUBE, n_nodes=4, n_apps=8, reqs_per_app=2)
+    for nw in (0, 2):
+        res = ShardedTube(plan, workers=nw).run()
+        p99 = sorted(r.t_done - r.t_arrive for r in res.completed)[-1]
+        mode = "byte-identical reference" if nw == 0 else \
+            f"{res.rounds} BSP rounds, lookahead {res.lookahead_ms} ms"
+        print(f"  workers={nw}: {len(res.completed)} workflows, "
+              f"p99 {p99:7.2f} ms, {res.n_events} events ({mode})")
+
+
 if __name__ == "__main__":
     demo_tube()
     demo_overlap()
     demo_torus()
+    demo_sharded()
     demo_engine()
     demo_modelzoo()

@@ -132,11 +132,15 @@ SYSTEMS = {c.name: c for c in (INFLESS, DEEPPLAN, FAASTUBE_STAR, FAASTUBE)}
 
 
 class FaaSTube(ChaosMixin, MigrationMixin):
-    def __init__(self, topo: Topology, cfg: TubeConfig = FAASTUBE):
+    def __init__(self, topo: Topology, cfg: TubeConfig = FAASTUBE,
+                 sim: LinkSim | None = None):
         self.topo = topo
         self.cfg = cfg
-        self.sim = LinkSim(topo, policy="drr" if cfg.slo_sched else "fifo",
-                           bg_every=cfg.bg_guard)
+        # `sim` injection: the sharded engine (core/shard.py) substitutes
+        # a ShardedLinkSim; default construction is unchanged
+        self.sim = sim if sim is not None else \
+            LinkSim(topo, policy="drr" if cfg.slo_sched else "fifo",
+                    bg_every=cfg.bg_guard)
         self.index = DataIndex()
         self.pf = PathFinder(topo, transit="gpu,chip,pcie,host")
         self.pools: dict[str, ElasticPool] = {}
@@ -377,7 +381,8 @@ class FaaSTube(ChaosMixin, MigrationMixin):
 
     def adopt_host_object(self, func: str, data_id: str, size_mb: float,
                           host: str, now: float, *,
-                          home: str | None = None) -> StoredItem:
+                          home: str | None = None,
+                          avail_segs=None) -> StoredItem:
         """Register bytes that already exist on ``host`` (a deployed
         model checkpoint, a pre-staged dataset) without moving them.
 
@@ -392,7 +397,8 @@ class FaaSTube(ChaosMixin, MigrationMixin):
         home = home or host
         self._pool(home)
         item = StoredItem(data_id, size_mb, now, now, func=func,
-                          on_host=True, host=host)
+                          on_host=True, host=host,
+                          avail_segs=avail_segs)
         self.items[home][data_id] = item
         self._home[data_id] = home
         rec = DataRecord(data_id, node_of(host), host, size_mb, "host", -1)

@@ -124,6 +124,7 @@ import math
 from bisect import bisect_right
 from collections import deque
 from dataclasses import dataclass
+from functools import partial
 from heapq import heappop, heappush
 
 from repro.core.pinned_buffer import FOREGROUND
@@ -167,6 +168,12 @@ class Transfer:
     on_progress: object = None    # callback(sim, landed_mb) at trigger-batch
     #                               boundaries of the FINAL hop (None: no
     #                               poke events are ever scheduled)
+    src_segs: object = None       # optional source availability schedule
+    #                               [(t0, interval, count), ...]: chunks
+    #                               enter hop 0 per this schedule instead
+    #                               of the submit-time trigger ramp (used
+    #                               by cross-shard staged handoff to
+    #                               stitch cut-through over a boundary)
 
 
 class _Burst:
@@ -398,6 +405,11 @@ class LinkSim:
         self._seq = itertools.count()
         self._arr_seq = itertools.count()
         self._events: list[tuple] = []
+        # single event-push funnel: every scheduling site goes through
+        # `self._push(ev)` so a sharded engine (core/shard.py) can route
+        # events to per-node heaps by rebinding one attribute.  Bound to
+        # a C-level partial here — zero overhead for the global heap.
+        self._push = partial(heappush, self._events)
         # per-link scheduling state; func-keyed entries are evicted when a
         # function has no transfers in flight (see _finish_transfer)
         self._active: dict[tuple, _Service] = {}
@@ -606,7 +618,7 @@ class LinkSim:
 
     def call_at(self, t: float, fn):
         """Schedule an arbitrary callback(sim) at time t."""
-        heappush(self._events, (t, next(self._seq), "call", fn))
+        self._push((t, next(self._seq), "call", fn))
 
     # ------------------------------------------------------------- faults --
     def _cut_active(self, link):
@@ -752,7 +764,7 @@ class LinkSim:
                on_done=None, on_progress=None, unpinned: bool = False,
                stage=None, stage_mb: float = 0.0,
                stage_cls: str = FOREGROUND,
-               stage_key: str = "host") -> int:
+               stage_key: str = "host", avail_segs=None) -> int:
         """Submit a (possibly multi-path) transfer.  paths: [(path, bw)].
 
         ``stage``/``stage_mb``: staging back-pressure.  The transfer must
@@ -771,7 +783,8 @@ class LinkSim:
         t = self.now if t is None else t
         tid = next(self._tid)
         tr = Transfer(tid, func, size_mb, list(paths), t, on_done=on_done,
-                      unpinned=unpinned, on_progress=on_progress)
+                      unpinned=unpinned, on_progress=on_progress,
+                      src_segs=avail_segs)
         # fixed costs charged before the first chunk moves
         if pin_fresh_mb > 0:
             tr.extra_latency += PIN_MS_PER_MB * pin_fresh_mb
@@ -837,18 +850,26 @@ class LinkSim:
             self._finish_failed(tr)
             return
         trig = TRIGGER_MS / BATCH_CHUNKS
+        src = tr.src_segs
+        if src is not None and (len(real) != 1 or src[0][0] < start
+                                or sum(s[2] for s in src) != real[0][1]):
+            # the upstream schedule only applies to a single-path launch
+            # whose chunk count matches and whose first chunk is not
+            # already in the past — otherwise the data is simply present
+            # and the normal trigger ramp is the correct semantics
+            src = None
         for pi, (path, n, ci0) in enumerate(real):
             # batched triggering: chunk ci launches at start + (ci//B)*trig.
             # Represented as one linear segment at the average trigger rate
             # (trig per chunk): the per-chunk shift is < TRIGGER_MS and the
             # launch rate is always faster than any link's service rate, so
             # chunk finish times are unchanged.
-            segs = [(start + ci0 * trig, trig, n)]
+            segs = list(src) if src is not None \
+                else [(start + ci0 * trig, trig, n)]
             is_last_path = pi == len(real) - 1
             b = _Burst(tr.tid, tr.func, path, 0, n, self.chunk_mb,
                        last_mb if is_last_path else self.chunk_mb, segs)
-            heappush(self._events,
-                     (segs[0][0], next(self._seq), "arrive", b))
+            self._push((segs[0][0], next(self._seq), "arrive", b))
 
     # ------------------------------------------------------------ engine --
     def _link_bw(self, link) -> tuple:
@@ -904,7 +925,7 @@ class LinkSim:
         if cur is not None and cur <= t + 1e-12:
             return
         self._wake[key] = t
-        heappush(self._events, (t, next(self._seq), "wake", key))
+        self._push((t, next(self._seq), "wake", key))
 
     def _wake_fire(self, key):
         self._wake.pop(key, None)
@@ -1335,13 +1356,12 @@ class LinkSim:
             downstream = _Burst(
                 b.tid, b.func, b.path, b.hop + 1, count, b.chunk,
                 b.last if b.taken == b.n else b.chunk, list(fsegs))
-            heappush(self._events,
-                     (fsegs[0][0], next(self._seq), "arrive", downstream))
+            self._push((fsegs[0][0], next(self._seq), "arrive", downstream))
         svc = _Service(gen, link, b, start, count, fsegs, dur, dur_last,
                        busy, coalesced=not picked, downstream=downstream,
                        max_avail=max_avail, end=f)
         self._active[link] = svc
-        heappush(self._events, (f, next(self._seq), "done", (link, gen)))
+        self._push((f, next(self._seq), "done", (link, gen)))
         if tr.on_progress is not None:
             self._arm_pokes(tr, b, count, fsegs)
 
@@ -1504,7 +1524,7 @@ class LinkSim:
         gen = self._gen.get(link, 0) + 1
         self._gen[link] = gen
         end = picks_f[-1]
-        events = self._events
+        push = self._push
         for part in order:
             b = part.burst
             if b.hop + 2 < len(b.path):
@@ -1512,8 +1532,7 @@ class LinkSim:
                            b.chunk, b.last if b.taken == b.n else b.chunk,
                            list(part.fsegs))
                 part.downstream = d
-                heappush(events,
-                         (part.fsegs[0][0], next(self._seq), "arrive", d))
+                push((part.fsegs[0][0], next(self._seq), "arrive", d))
             elif self.transfers[b.tid].on_progress is not None:
                 self._arm_pokes(self.transfers[b.tid], b, part.count,
                                 part.fsegs)
@@ -1523,7 +1542,7 @@ class LinkSim:
         svc.wsnap = wsnap
         svc.bgsnap = bgsnap
         self._active[link] = svc
-        heappush(events, (end, next(self._seq), "done", (link, gen)))
+        push((end, next(self._seq), "done", (link, gen)))
         for fut, _s, f in pend:
             self._wake_push(link, fut, f)
 
@@ -1622,8 +1641,7 @@ class LinkSim:
             svc.all_fg = all_fg
             svc.gapless = gapless
             svc.end = picks_f[-1]
-            heappush(self._events,
-                     (svc.end, next(self._seq), "done", (link, gen)))
+            self._push((svc.end, next(self._seq), "done", (link, gen)))
             for fut, _s, f in pend:
                 self._wake_push(link, fut, f)
             kept = {id(p.burst): p for p in order}
@@ -1725,8 +1743,7 @@ class LinkSim:
         else:
             svc.fsegs, end = _seg_prefix(svc.fsegs, keep)
             svc.end = end
-            heappush(self._events,
-                     (end, next(self._seq), "done", (link, gen)))
+            self._push((end, next(self._seq), "done", (link, gen)))
         # return the cut chunks to the head of the function's queue
         # (a cascaded downstream burst may have been trimmed to exactly
         # its taken count — nothing left to requeue then)
@@ -1835,8 +1852,8 @@ class LinkSim:
         if b.hop + 2 < len(b.path):
             return
         for k in range(BATCH_CHUNKS, count, BATCH_CHUNKS):
-            heappush(self._events,
-                     (_seg_at(fsegs, k - 1), next(self._seq), "poke", b.tid))
+            self._push(
+                (_seg_at(fsegs, k - 1), next(self._seq), "poke", b.tid))
 
     def _complete_service(self, t, link, gen):
         svc = self._active.get(link)
@@ -1901,7 +1918,13 @@ class LinkSim:
     def step(self) -> bool:
         if not self._events:
             return False
-        t, _seq, kind, payload = heappop(self._events)
+        return self._exec(heappop(self._events))
+
+    def _exec(self, ev) -> bool:
+        """Dispatch one popped event.  Split from ``step`` so the sharded
+        engine (core/shard.py) can pop from per-node heaps and reuse the
+        dispatch body unchanged."""
+        t, _seq, kind, payload = ev
         if t > self.now:
             self.now = t
         self.n_events += 1

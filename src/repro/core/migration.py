@@ -62,6 +62,10 @@ class StoredItem:
     host: str = ""           # the host this item spilled to
     held: str = ""           # device currently charged for the bytes
     waiters: list = field(default_factory=list)  # fetches parked on a reload
+    avail_segs: object = None  # availability schedule of the host bytes
+    #                            (cross-shard staged handoff: a reload
+    #                            that starts before the boundary copy
+    #                            fully lands pipelines against it)
 
     def __post_init__(self):
         if self.on_host and self.state == DEVICE:
@@ -251,6 +255,7 @@ class MigrationMixin:
             # fetch's own foreground admission (not the migration class)
             plan = self.engine.compile("reload", func, src_host, dst,
                                        rec.size_mb)
+            plan.src_segs, item.avail_segs = item.avail_segs, None
             self.engine.submit(plan, t + cost, on_done=landed,
                                on_fail=lost if fail is not None else None,
                                handle=handle)

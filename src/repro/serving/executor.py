@@ -39,7 +39,7 @@ from collections import defaultdict, deque
 from dataclasses import dataclass, field
 
 from repro.core.api import FaaSTube, TubeConfig
-from repro.core.transfer import host_of
+from repro.core.transfer import host_of, is_device
 from repro.core.topology import Topology
 from repro.serving.workflow import Workflow, isolated_compute_ms, place
 
@@ -48,6 +48,11 @@ from repro.serving.workflow import Workflow, isolated_compute_ms, place
 class RequestState:
     rid: int
     t_arrive: float
+    #: cross-shard execution (core/shard.py): non-empty on a SHADOW
+    #: request — the shard id that owns the real request — with
+    #: ``home_rid`` the rid it has there.  Empty on ordinary requests.
+    origin: str = ""
+    home_rid: int = -1
     done_stages: set = field(default_factory=set)
     started_stages: set = field(default_factory=set)
     stored_stages: set = field(default_factory=set)
@@ -92,11 +97,21 @@ STAGE_RECOVERY_BUDGET = 5     # re-executions per (request, stage)
 class WorkflowEngine:
     def __init__(self, topo: Topology, cfg: TubeConfig,
                  placements: dict[str, dict] | None = None, *,
-                 recover: bool = True):
-        self.tube = FaaSTube(topo, cfg)
+                 recover: bool = True, sim=None, boundary=None,
+                 local_nodes=None):
+        self.tube = FaaSTube(topo, cfg, sim=sim)
         self.topo = topo
         self.cfg = cfg
         self.placements = placements or {}
+        # cross-shard execution (core/shard.py): `boundary` receives
+        # stages placed outside `local_nodes` instead of _try_stage; both
+        # None on an ordinary engine, which keeps every hook below on the
+        # single-attribute-check fast path
+        self.boundary = boundary
+        self.local_nodes = frozenset(local_nodes) if local_nodes else None
+        self.apps: dict[str, Workflow] = {}      # name -> workflow (shard
+        #                                          mode: remote triggers
+        #                                          resolve apps by name)
         self.gpu_busy: dict[str, bool] = defaultdict(bool)
         self.gpu_queue: dict[str, deque] = defaultdict(deque)
         self.requests: dict[int, RequestState] = {}
@@ -141,15 +156,84 @@ class WorkflowEngine:
         self.tube.sim.run()
         return self.completed
 
+    # -------------------------------------------- cross-shard execution --
+    # Entry points driven by core/shard.py's boundary protocol.  An
+    # ordinary engine never reaches them.
+    def register_apps(self, apps):
+        for w in apps:
+            self.apps[w.name] = w
+
+    def accept_stage(self, w: Workflow, rs: RequestState, stage_name: str,
+                     state: dict):
+        """Run one handed-off stage locally.  ``rs`` is either a shadow
+        request (created by the boundary client) or — when a remote
+        stage's successor returns to its home shard — the real one.
+        ``state`` carries set-unions and scalar DELTAS accumulated on
+        the sending shard since its last sync."""
+        rs.done_stages |= state["done"]
+        rs.stored_stages |= state["stored"]
+        rs.fetched_stages |= state["fetched"]
+        rs.data_ids.update(state["data_ids"])
+        rs.h2g_ms += state["h2g_ms"]
+        rs.g2g_ms += state["g2g_ms"]
+        rs.compute_ms += state["compute_ms"]
+        s = self._wmeta(w).stage[stage_name]
+        rs.started_stages.discard(s.name)
+        # gate on the MERGED view: a fan-in stage syncs once per remote
+        # producer, and only the final merge sees every dep stored
+        if all(d in rs.stored_stages for d, _ in s.deps):
+            self._dispatch_or_try(w, rs, s)
+
+    def accept_complete(self, rs: RequestState, t_done: float,
+                        state: dict, failed: bool):
+        """A shadow of one of our requests finished (or failed) on its
+        executing shard: merge its deltas and record the completion."""
+        rs.h2g_ms += state["h2g_ms"]
+        rs.g2g_ms += state["g2g_ms"]
+        rs.compute_ms += state["compute_ms"]
+        rs.done_stages |= state["done"]
+        if failed:
+            self._fail_request(rs)
+            return
+        if rs.t_done >= 0:
+            return
+        rs.t_done = t_done
+        self.completed.append(rs)
+
     # ----------------------------------------------------------- engine ---
+    def _remote(self, w: Workflow, rs: RequestState, s) -> bool:
+        """True when stage s must execute on another shard.  GPU stages
+        belong to their placement's node; cpu stages (and completion)
+        belong to the request's origin shard."""
+        if self.boundary is None:
+            return False
+        if s.kind == "gpu":
+            ln = self.local_nodes
+            return ln is not None and \
+                self._gpu_of(w, s).split(":")[0] not in ln
+        return bool(rs.origin)
+
+    def _dispatch_or_try(self, w: Workflow, rs: RequestState, s):
+        if self._remote(w, rs, s):
+            # no started-dedup here: a fan-in stage receives one sync per
+            # producer (each carrying that producer's bytes), and the
+            # OWNING shard gates on its merged view in accept_stage; the
+            # boundary client dedups byte exports per (stage, dep)
+            self.boundary.dispatch(self, w, rs, s)
+        else:
+            self._try_stage(w, rs, s)
+
     def _start(self, w: Workflow, rs: RequestState):
         sim = self.tube.sim
         # publish host inputs on the host of the consuming stage's node
-        # (cluster topologies have per-node hosts)
+        # (cluster topologies have per-node hosts); inputs of a REMOTE
+        # stage are published by the owning shard at handoff
         meta = self._wmeta(w)
         for stage, mb in w.input_mb.items():
-            did = f"r{rs.rid}:in:{stage}"
             st = meta.stage[stage]
+            if self._remote(w, rs, st):
+                continue
+            did = f"r{rs.rid}:in:{stage}"
             host = host_of(self._gpu_of(w, st)) if st.kind == "gpu" else "host"
             self.tube.store(f"r{rs.rid}", did, mb, host, sim.now)
         for s in w.stages:
@@ -158,7 +242,7 @@ class WorkflowEngine:
                 self._run_stage(w, rs, s)
         for s in w.stages:
             if s.kind == "gpu" and not s.deps:
-                self._try_stage(w, rs, s)
+                self._dispatch_or_try(w, rs, s)
 
     def _gpu_of(self, w: Workflow, stage) -> str:
         g = self.placements[w.name][stage.name]
@@ -206,6 +290,9 @@ class WorkflowEngine:
         if rs.failed or rs.t_done >= 0:
             return
         rs.failed = True
+        if rs.origin:
+            self.boundary.complete(self, rs)     # relay to home shard
+            return
         self.failed.append(rs)
 
     def _fetch_failed(self, w: Workflow, rs: RequestState, s, did: str,
@@ -326,13 +413,15 @@ class WorkflowEngine:
         meta = self._wmeta(w)
         rs.fetched_stages.add(s.name)
         for dep, _mb in s.deps:
-            dep_stage = meta.stage[dep]
             consumers = meta.consumers[dep]
             if all(c in rs.fetched_stages for c in consumers):
                 did = rs.data_ids.get(dep)
-                if did and dep_stage.kind == "gpu":
-                    self.tube.consume(did, self._gpu_of(w, dep_stage),
-                                      sim.now)
+                # release from wherever the bytes actually live: on a
+                # shard that reloaded a handed-off dep, that is the local
+                # GPU, not the producer's placement
+                dev = self.tube._home.get(did) if did else None
+                if dev is not None and is_device(dev):
+                    self.tube.consume(did, dev, sim.now)
 
     def _consume_partial(self, w: Workflow, rs: RequestState, s):
         """Overlap twin of ``_consume_fetched``: runs at the stage's
@@ -344,13 +433,12 @@ class WorkflowEngine:
         meta = self._wmeta(w)
         rs.fetched_stages.add(s.name)
         for dep, _mb in s.deps:
-            dep_stage = meta.stage[dep]
             consumers = meta.consumers[dep]
             if all(c in rs.fetched_stages for c in consumers):
                 did = rs.data_ids.get(dep)
-                if did and dep_stage.kind == "gpu":
-                    self.tube.consume(did, self._gpu_of(w, dep_stage),
-                                      sim.now, partial=True)
+                dev = self.tube._home.get(did) if did else None
+                if dev is not None and is_device(dev):
+                    self.tube.consume(did, dev, sim.now, partial=True)
 
     def _drain_overlap(self, gpu: str, w: Workflow, rs: RequestState, s):
         """Overlap-aware stage execution (``TubeConfig.overlap``).
@@ -506,10 +594,14 @@ class WorkflowEngine:
         def stored(sim2, t):
             rs.stored_stages.add(s.name)
             for tg in meta.downstream[s.name]:
-                if tg.name in rs.done_stages \
-                        or not all(d in rs.stored_stages for d, _ in tg.deps):
+                if tg.name in rs.done_stages:
                     continue
-                self._try_stage(w, rs, tg)
+                if self._remote(w, rs, tg):
+                    # per-producer sync: ship this producer's bytes now;
+                    # the owning shard re-gates on its merged view
+                    self._dispatch_or_try(w, rs, tg)
+                elif all(d in rs.stored_stages for d, _ in tg.deps):
+                    self._dispatch_or_try(w, rs, tg)
 
         if out_mb and s.kind == "gpu":
             did = f"r{rs.rid}:{s.name}"
@@ -565,6 +657,9 @@ class WorkflowEngine:
         if rs.t_done >= 0:
             return
         rs.t_done = self.tube.sim.now
+        if rs.origin:
+            self.boundary.complete(self, rs)     # relay to home shard
+            return
         self.completed.append(rs)
 
 

@@ -1,0 +1,196 @@
+"""Sharded single-process engine vs the global heap: byte-identity.
+
+ShardedLinkSim partitions the event heap per node shard and pops the
+global (t, seq) minimum across shard heads.  Sequence numbers are
+allocated in push order, identically in both engines, so the pop order
+— and with it every timestamp, truncation, DRR round and fault
+transition — must be EXACTLY the single-heap order.  These sweeps pin
+that: randomized contended / striped / cut-through / fault scenarios,
+compared on the full popped-event trace, not just end states.
+"""
+import random
+
+import pytest
+
+from repro.core.api import FAASTUBE, SYSTEMS, FaaSTube
+from repro.core.linksim import LinkSim
+from repro.core.shard import ShardedLinkSim
+from repro.core.topology import cluster, dgx_v100
+from repro.serving.executor import WorkflowEngine
+
+
+def _trace(sim):
+    """Record every popped event's (t, seq, kind) before dispatch."""
+    log = []
+    orig = sim._exec
+
+    def _exec(ev):
+        log.append((ev[0], ev[1], ev[2]))
+        return orig(ev)
+
+    sim._exec = _exec
+    return log
+
+
+def _pair(topo_fn, drive, policy="drr", bg_every=0):
+    """Run `drive(sim, rng)` on both engines, return both traces plus
+    per-transfer completion times."""
+    out = []
+    for cls in (LinkSim, ShardedLinkSim):
+        sim = cls(topo_fn(), policy=policy, bg_every=bg_every)
+        log = _trace(sim)
+        drive(sim)
+        sim.run()
+        done = {tid: tr.t_done for tid, tr in sim.transfers.items()}
+        out.append((tuple(log), done, sim.now, sim.n_events))
+    return out
+
+
+def _assert_identical(g, s):
+    assert g[3] == s[3], f"event counts differ: {g[3]} vs {s[3]}"
+    assert g[0] == s[0], "popped-event traces diverge"
+    assert g[1] == s[1], "transfer completion times diverge"
+    assert g[2] == s[2]
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_contended_single_node_identical(seed):
+    """K flows brawling over one node's links, random weights/classes."""
+    rng = random.Random(seed)
+
+    def drive(sim):
+        r = random.Random(seed)
+        for i in range(12):
+            f = f"f{i}"
+            sim.set_rate_weight(f, 0.25 + r.random() * 3)
+            if r.random() < 0.3:
+                sim.set_func_class(f, "bg")
+            src, dst = r.sample(["gpu0", "gpu1", "gpu2", "gpu3"], 2)
+            sim.submit(f, [((src, dst), 24.0)],
+                       4.0 + r.random() * 96.0, t=r.random() * 8.0)
+
+    g, s = _pair(dgx_v100, drive)
+    _assert_identical(g, s)
+    del rng
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_striped_multipath_identical(seed):
+    """Multipath striping: chunks split across two paths per transfer."""
+
+    def drive(sim):
+        r = random.Random(100 + seed)
+        for i in range(8):
+            f = f"m{i}"
+            sim.set_rate_weight(f, 0.5 + r.random())
+            sim.submit(f, [(("gpu0", "gpu2"), 24.0),
+                           (("gpu0", "gpu1", "gpu2"), 24.0)],
+                       16.0 + r.random() * 64.0, t=r.random() * 4.0)
+
+    g, s = _pair(dgx_v100, drive)
+    _assert_identical(g, s)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_cut_through_internode_identical(seed):
+    """Multi-hop gpu->host->host->gpu paths across a 3-node cluster:
+    cut-through pipelining crosses shard-owned links and the mesh."""
+
+    def drive(sim):
+        r = random.Random(200 + seed)
+        for i in range(8):
+            f = f"x{i}"
+            a, b = r.sample(range(3), 2)
+            path = (f"n{a}:gpu0", f"n{a}:host", f"n{b}:host",
+                    f"n{b}:gpu{r.randrange(2)}")
+            sim.set_rate_weight(f, 0.5 + r.random() * 2)
+            sim.submit(f, [(path, 12.5)], 8.0 + r.random() * 56.0,
+                       t=r.random() * 6.0)
+
+    g, s = _pair(lambda: cluster(3, base=dgx_v100), drive)
+    _assert_identical(g, s)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_fault_scenarios_identical(seed):
+    """kill_link / retime_link / fail_transfer mid-flight: the stale-heap
+    hazard paths must shard identically too."""
+
+    def drive(sim):
+        r = random.Random(300 + seed)
+        tids = []
+        for i in range(10):
+            f = f"k{i}"
+            a, b = r.sample(range(3), 2)
+            path = (f"n{a}:gpu0", f"n{a}:host", f"n{b}:host", f"n{b}:gpu0")
+            tids.append(sim.submit(f, [(path, 12.5)],
+                                   16.0 + r.random() * 48.0,
+                                   t=r.random() * 4.0))
+        victim_a, victim_b = r.sample(range(3), 2)
+        sim.call_at(2.0 + r.random() * 3,
+                    lambda s: s.kill_link(f"n{victim_a}:host",
+                                          f"n{victim_b}:host", "chaos"))
+        sim.call_at(1.0 + r.random() * 2,
+                    lambda s: s.retime_link(f"n{victim_a}:gpu0",
+                                            f"n{victim_a}:host",
+                                            6.0 + r.random() * 6))
+        doomed = tids[r.randrange(len(tids))]
+        sim.call_at(r.random() * 5,
+                    lambda s: s.fail_transfer(doomed, "chaos"))
+
+    g, s = _pair(lambda: cluster(3, base=dgx_v100), drive)
+    _assert_identical(g, s)
+
+
+def _run_fleet_engine(sharded: bool, cfg, with_crash: bool):
+    from benchmarks.fleet import build_fleet
+    from benchmarks.workloads import arrivals
+    topo = cluster(4, base=dgx_v100)
+    apps, placements = build_fleet(topo, 4, 16)
+    sim = None
+    if sharded:
+        sim = ShardedLinkSim(topo,
+                             policy="drr" if cfg.slo_sched else "fifo",
+                             bg_every=cfg.bg_guard)
+    eng = WorkflowEngine(topo, cfg, placements=placements, sim=sim)
+    log = _trace(eng.tube.sim)
+    if with_crash:
+        eng.tube.sim.call_at(30.0, lambda s: eng.tube.crash_node("n2"))
+    for k, w in enumerate(apps):
+        for t in arrivals("bursty", 3, 40.0, k):
+            eng.submit_workflow(w, t)
+    eng.run()
+    lats = tuple(sorted((r.rid, round(r.t_done - r.t_arrive, 9))
+                        for r in eng.completed))
+    return (tuple(log), lats, len(eng.failed), eng.tube.sim.n_events)
+
+
+@pytest.mark.parametrize("sname", ["faastube", "infless+"])
+def test_fleet_executor_identical(sname):
+    """End-to-end: the full serving stack (stores, migration, SLO
+    admission, straddle workflows) on both engines, trace-compared."""
+    g = _run_fleet_engine(False, SYSTEMS[sname], with_crash=False)
+    s = _run_fleet_engine(True, SYSTEMS[sname], with_crash=False)
+    assert g == s
+
+
+def test_fleet_executor_with_crash_identical():
+    """crash_node retires a node mid-trace: lineage recovery, gpu
+    remapping and object invalidation must replay byte-identically."""
+    g = _run_fleet_engine(False, FAASTUBE, with_crash=True)
+    s = _run_fleet_engine(True, FAASTUBE, with_crash=True)
+    assert g == s
+
+
+def test_sharded_engine_partitions_by_node():
+    """Sanity on the partitioning itself: a cluster run actually spreads
+    events over per-node heaps (one per node + the mesh shard)."""
+    topo = cluster(4, base=dgx_v100)
+    sim = ShardedLinkSim(topo, policy="drr")
+    tube = FaaSTube(topo, FAASTUBE, sim=sim)
+    tube.store("f", "d0", 64.0, "n0:gpu0", 0.0)
+    tube.fetch("f", "d0", "n2:gpu1", 1.0)
+    tube.store("g", "d1", 32.0, "n1:gpu0", 0.0)
+    tube.fetch("g", "d1", "n1:gpu3", 1.0)
+    sim.run()
+    assert sim.shard_count >= 3      # n0/n1/n2 touched, plus mesh links

@@ -1,0 +1,136 @@
+"""Parallel (workers=N) sharded mode: worker-count invariance, hash-seed
+invariance, staged-handoff completeness, and crash-retirement semantics.
+
+The BSP driver's contract is NOT byte-identity with the global heap
+(staged handoffs export straddle bytes eagerly; sub-lookahead control
+messages may be delayed up to one window) — it is *determinism*: the
+same plan must produce the same completions, event counts and round
+structure whatever the worker count or the process hash salt, because
+every shard inbox is a sorted merge of pickled boundary messages.
+"""
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core.api import FAASTUBE, SYSTEMS
+from benchmarks.fleet import build_plan, run_fleet_sharded
+
+REPO = Path(__file__).resolve().parent.parent
+
+pytestmark = pytest.mark.skipif(os.name != "posix",
+                                reason="fork-based worker processes")
+
+
+def _digest(res):
+    recs = tuple(sorted((r.rid, round(r.t_arrive, 9), round(r.t_done, 9),
+                         round(r.h2g_ms, 6), round(r.g2g_ms, 6))
+                        for r in res.completed))
+    return (len(res.completed), len(res.failed), res.n_events,
+            res.rounds, recs)
+
+
+def test_worker_count_invariant():
+    """workers=1, 2, 4 must produce identical results — shard inboxes
+    are deterministic merges, independent of process assignment."""
+    from repro.core.shard import ShardedTube
+    plan = build_plan(FAASTUBE, n_nodes=4, n_apps=16, reqs_per_app=2)
+    digests = {w: _digest(ShardedTube(plan, workers=w).run())
+               for w in (1, 2, 4)}
+    assert digests[1] == digests[2] == digests[4]
+    n_sub = 16 * 2
+    assert digests[1][0] == n_sub and digests[1][1] == 0
+
+
+def test_all_straddle_requests_complete():
+    """Every 4th fleet app crosses a node boundary: the staged handoff
+    (export -> mesh -> adopt -> reload) must carry each one end to end,
+    including the multi-producer join back on the home shard."""
+    res = run_fleet_sharded(SYSTEMS["faastube"], workers=2,
+                            n_nodes=4, n_apps=16, reqs_per_app=3)
+    assert len(res.completed) == 48 and not res.failed
+    assert all(r.t_done > r.t_arrive for r in res.completed)
+
+
+def test_parallel_conservative_vs_reference():
+    """The parallel run is an approximation, not an arbitrary one: the
+    same trace completes the same request population, and latencies stay
+    within the staged-handoff envelope of the byte-exact reference."""
+    plan = build_plan(FAASTUBE, n_nodes=4, n_apps=16, reqs_per_app=2)
+    from repro.core.shard import ShardedTube
+    ref = ShardedTube(plan, workers=0).run()
+    par = ShardedTube(plan, workers=2).run()
+    assert len(par.completed) == len(ref.completed)
+    ref_p99 = sorted(r.t_done - r.t_arrive for r in ref.completed)[-1]
+    par_p99 = sorted(r.t_done - r.t_arrive for r in par.completed)[-1]
+    # eager staging may beat the reference; a blowup beyond 2x means the
+    # boundary protocol is stalling crossings by whole windows
+    assert par_p99 < 2.0 * ref_p99, (par_p99, ref_p99)
+
+
+def test_crash_node_retires_shard():
+    """crash_node in parallel mode kills the whole owning shard: its
+    home requests fail, every other shard's requests complete, and the
+    driver terminates rather than waiting on the dead shard."""
+    from repro.core.shard import ShardedTube
+    plan = build_plan(FAASTUBE, n_nodes=4, n_apps=8, reqs_per_app=2)
+    plan.chaos = [(5.0, "crash_node", ("n1",))]
+    digests = []
+    for w in (1, 2):
+        res = ShardedTube(plan, workers=w).run()
+        # apps homed on n1: video@1 and video@5 -> 4 requests die with
+        # the shard (failed outright or stranded, both count)
+        assert len(res.completed) + len(res.failed) == 16
+        assert len(res.failed) == 4, [r.rid for r in res.failed]
+        assert all(r.app.startswith("video@") or r.app == ""
+                   for r in res.failed)
+        digests.append(_digest(res))
+    assert digests[0] == digests[1]
+
+
+_HASHSEED_SCRIPT = """\
+import hashlib, json
+from repro.core.api import FAASTUBE
+from repro.core.shard import ShardedTube
+from benchmarks.fleet import build_plan
+plan = build_plan(FAASTUBE, n_nodes=4, n_apps=8, reqs_per_app=2)
+res = ShardedTube(plan, workers=2).run()
+recs = sorted((r.rid, round(r.t_done, 9)) for r in res.completed)
+digest = hashlib.sha256(json.dumps(
+    [res.n_events, res.rounds, recs]).encode()).hexdigest()
+print(digest)
+"""
+
+
+def test_parallel_trace_identical_across_hash_seeds():
+    """Pickled boundary messages and merge order must not leak set/dict
+    hash order: same digest under different PYTHONHASHSEED salts
+    (mirrors tests/test_faults.py's chaos determinism check)."""
+    digests = set()
+    for hs in ("0", "31337"):
+        env = dict(os.environ, PYTHONHASHSEED=hs,
+                   PYTHONPATH=str(REPO / "src"))
+        out = subprocess.run([sys.executable, "-c", _HASHSEED_SCRIPT],
+                             env=env, capture_output=True, text=True,
+                             cwd=REPO, timeout=300)
+        assert out.returncode == 0, out.stderr
+        digests.add(out.stdout.strip().splitlines()[-1])
+    assert len(digests) == 1
+
+
+def test_sync_timeout_guard(monkeypatch):
+    """The boundary-sync watchdog turns a deadlocked round into a loud
+    failure instead of a hung CI job."""
+    from repro.core import shard as S
+
+    def hung_worker(conn, plan_bytes, shard_ids):   # pragma: no cover
+        while True:
+            time.sleep(0.5)                          # never replies
+
+    monkeypatch.setattr(S, "_worker_main", hung_worker)
+    plan = build_plan(FAASTUBE, n_nodes=2, n_apps=2, reqs_per_app=1)
+    with pytest.raises(RuntimeError, match="boundary sync deadlock"):
+        S.ShardedTube(plan, workers=1, sync_timeout_s=0.2).run()
