@@ -1,0 +1,213 @@
+"""Calibrate LinkSim against the real jax data plane.
+
+For each single-hop link class the backend can physically drive on this
+machine — ``h2g`` (host->device upload), ``g2h`` (device->host
+download), ``g2g`` (device->device), ``h2h`` (host->host, the network
+stand-in) — this measures real min-of-k wall times at a sweep of
+transfer sizes and least-squares fits the simulator's two-parameter
+link model::
+
+    t_ms = lat_ms + size_mb / bw          (bw in GB/s == MB/ms,
+                                           the Topology edge unit)
+
+Fit quality is validated on HELD-OUT sizes interleaved with the fit
+sweep: the median relative prediction error across all classes must be
+<= 10% (``fit_error_ok``, CI-gated — the linear model really does
+describe the pipelined data plane, it is not a shrug).  The fitted
+profile is written into the report (``link_classes``) and is directly
+loadable into any Topology via :func:`apply_profile`, which classifies
+every edge (host-host -> h2h, anything touching host/pcie -> the
+averaged h2g/g2h PCIe class, device-device -> g2g) and ``set_bw``s it
+to the measured value.  The report round-trips the profile: a LinkSim
+fetch on the calibrated topology vs the real measured wall for the same
+movement (``sim_vs_real_x``, reported not gated — the sim models
+contention the idle micro doesn't have).
+
+Fitted bandwidths, latencies and error magnitudes are machine-dependent
+(band_gate SKIP_KEYS); the sweep shape, class list and the ok flags are
+deterministic and gated.
+
+Run:  PYTHONPATH=src python -m benchmarks.calibrate [smoke]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.api import FAASTUBE, FaaSTube
+from repro.core.backend_jax import JaxBackend
+from repro.core.linksim import BATCH_CHUNKS, LinkSim
+from repro.core.pathfinder import PathFinder
+from repro.core.pinned_buffer import CircularPinnedBuffer
+from repro.core.topology import Topology, cluster, dgx_v100
+from repro.core.transfer import TransferEngine
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "BENCH_calibrate.json")
+PROFILE_OUT = os.path.join(os.path.dirname(__file__), "..",
+                           "calibrated_profile.json")
+FIT_SIZES_MB = [8.0, 32.0, 64.0, 128.0]
+HOLDOUT_SIZES_MB = [48.0, 96.0]     # interleaved, never fitted
+MAX_MEDIAN_ERR_PCT = 10.0
+
+#: class -> (topology builder, plan kind, src, dst)
+CLASSES = {
+    "h2g": (dgx_v100, "h2g", "host", "gpu1"),
+    "g2h": (dgx_v100, "g2h", "gpu1", "host"),
+    "g2g": (dgx_v100, "g2g", "gpu0", "gpu1"),
+    "h2h": (lambda: cluster(2), "h2h", "n0:host", "n1:host"),
+}
+
+
+def _measure(cls: str, reps: int) -> dict[float, float]:
+    """Real min-of-k wall_ms per transfer size for one link class.
+    Passes are interleaved across sizes (the rep loop is OUTER) so a
+    transient load spike on this shared box degrades one pass of every
+    size instead of every pass of one size — min-of-k then drops it."""
+    topo_fn, kind, src, dst = CLASSES[cls]
+    topo = topo_fn()
+    eng = TransferEngine(LinkSim(topo), PathFinder(topo),
+                         CircularPinnedBuffer(), topo, g2g="direct")
+    be = JaxBackend(store_mb=384.0, host_mb=512.0)
+    sizes = sorted(FIT_SIZES_MB + HOLDOUT_SIZES_MB)
+    plans = {}
+    for size_mb in sizes:
+        did = f"cal-{cls}-{size_mb:g}"
+        plans[size_mb] = eng.compile(kind, "cal", src, dst, size_mb,
+                                     data_id=did)
+    out: dict[float, float] = {}
+    for r in range(reps + 1):                  # pass 0 warms jit + pools
+        for size_mb in sizes:
+            plan = plans[size_mb]
+            be.drop_object(plan.data_id, plan.dst)
+            rep = be.execute(plan)
+            if r:
+                out[size_mb] = min(out.get(size_mb, 1e18), rep.wall_ms)
+    for plan in plans.values():
+        be.drop_object(plan.data_id)
+    return out
+
+
+def fit_class(walls: dict[float, float]) -> dict:
+    """Least-squares (bw, lat) from the fit sizes; error on holdout."""
+    xs = np.array(FIT_SIZES_MB)
+    ys = np.array([walls[s] for s in FIT_SIZES_MB])
+    slope, intercept = (float(v) for v in np.polyfit(xs, ys, 1))
+    errs = []
+    for s in HOLDOUT_SIZES_MB:
+        pred = intercept + slope * s
+        errs.append(float(100.0 * abs(pred - walls[s]) / walls[s]))
+    return {
+        "bw_gbps": round(1.0 / slope, 3),       # GB/s == MB/ms
+        "lat_ms": round(max(intercept, 0.0), 3),
+        "slope_ms_per_mb": round(slope, 6),
+        "intercept_ms": round(intercept, 3),
+        "holdout_err_pct": [round(e, 2) for e in errs],
+    }
+
+
+def _edge_class(a: str, b: str) -> str:
+    host_a, host_b = "host" in a, "host" in b
+    if host_a and host_b:
+        return "h2h"
+    if host_a or host_b or "pcie" in a or "pcie" in b:
+        return "pcie"
+    return "g2g"
+
+
+def apply_profile(topo: Topology, profile: dict) -> int:
+    """Retime every topology edge to the calibrated bandwidth of its
+    link class; returns the number of edges retimed.  The ``pcie``
+    class averages the h2g/g2h fits (edges are symmetric; the two
+    directions were measured separately)."""
+    lc = profile["link_classes"]
+    bw = {
+        "pcie": (lc["h2g"]["bw_gbps"] + lc["g2h"]["bw_gbps"]) / 2.0,
+        "g2g": lc["g2g"]["bw_gbps"],
+        "h2h": lc["h2h"]["bw_gbps"],
+    }
+    seen = set()
+    for (a, b) in list(topo.edges):
+        if (b, a) in seen:
+            continue
+        seen.add((a, b))
+        topo.set_bw(a, b, bw[_edge_class(a, b)])
+    return len(seen)
+
+
+def roundtrip(profile: dict, measured_h2g: dict[float, float]) -> dict:
+    """Load the profile into a fresh topology and compare one simulated
+    fetch against the real measured wall for the same movement."""
+    topo = dgx_v100()
+    n_edges = apply_profile(topo, profile)
+    tube = FaaSTube(topo, FAASTUBE)
+    size_mb = 64.0
+    tube.store("prod", "cal", size_mb, "host", 0.0)
+    done = {}
+    tube.fetch("cons", "cal", "gpu1", 0.0,
+               on_ready=lambda s, t: done.setdefault("t", t))
+    tube.sim.run()
+    sim_ms = done["t"]
+    real_ms = measured_h2g[size_mb]
+    return {
+        "edges_retimed": n_edges,
+        "size_mb": size_mb,
+        "sim_ms": round(sim_ms, 3),
+        "measured_ms": round(real_ms, 3),
+        "sim_vs_real_x": round(sim_ms / real_ms, 3),
+        "profile_applied": True,
+    }
+
+
+def main(argv=None):
+    args = list(argv if argv is not None else sys.argv[1:])
+    # smoke == full here: the whole sweep is ~12 s and fewer min-of-k
+    # passes make the <=10% fit gate flaky on a noisy shared box
+    del args
+    reps = 5
+    t0 = time.perf_counter()
+    walls = {cls: _measure(cls, reps) for cls in CLASSES}
+    fits = {cls: fit_class(w) for cls, w in walls.items()}
+    all_errs = [e for f in fits.values() for e in f["holdout_err_pct"]]
+    median_err = float(np.median(all_errs))
+    profile = {
+        "chunk_mb": 2.0,
+        "batch_chunks": BATCH_CHUNKS,
+        "link_classes": fits,
+    }
+    report = {
+        "classes": sorted(CLASSES),
+        "fit_sizes_mb": FIT_SIZES_MB,
+        "holdout_sizes_mb": HOLDOUT_SIZES_MB,
+        "link_classes": fits,
+        "median_err_pct": round(median_err, 2),
+        "fit_error_ok": bool(median_err <= MAX_MEDIAN_ERR_PCT),
+        "roundtrip": roundtrip(profile, walls["h2g"]),
+        "chunk_mb": 2.0,
+        "batch_chunks": BATCH_CHUNKS,
+    }
+    report["wall_s"] = round(time.perf_counter() - t0, 3)
+    with open(DEFAULT_OUT, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    with open(PROFILE_OUT, "w") as f:
+        json.dump(profile, f, indent=2, sort_keys=True)
+    for cls, fit in fits.items():
+        emit("calibrate", f"{cls}.bw", fit["bw_gbps"], "GB/s",
+             f"lat={fit['lat_ms']}ms err={fit['holdout_err_pct']}%")
+    emit("calibrate", "median_err", median_err, "%",
+         f"ok={report['fit_error_ok']}")
+
+    assert report["fit_error_ok"], \
+        f"median holdout error {median_err:.1f}% > {MAX_MEDIAN_ERR_PCT}%"
+    assert report["roundtrip"]["profile_applied"]
+    assert report["roundtrip"]["edges_retimed"] > 0
+    return report
+
+
+if __name__ == "__main__":
+    main()

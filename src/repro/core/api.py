@@ -133,9 +133,27 @@ SYSTEMS = {c.name: c for c in (INFLESS, DEEPPLAN, FAASTUBE_STAR, FAASTUBE)}
 
 class FaaSTube(ChaosMixin, MigrationMixin):
     def __init__(self, topo: Topology, cfg: TubeConfig = FAASTUBE,
-                 sim: LinkSim | None = None):
+                 sim: LinkSim | None = None, backend=None):
         self.topo = topo
         self.cfg = cfg
+        # data-plane backend: None/"sim" keeps the pure simulator;
+        # "jax" (or a ready JaxBackend instance) arms the real data
+        # plane — every identified plan moves its actual bytes through
+        # the chunked-copy pipeline at submit time, wall-clock work that
+        # never perturbs a single simulated event
+        if backend in (None, "", "sim"):
+            self.backend = None
+        elif backend == "jax":
+            from repro.core.backend_jax import JaxBackend
+            # physical capacity, not policy: sized above the sim-side
+            # store cap so transient double-residency (a spill's source
+            # copy + its landed host copy, a fetch's fresh dst copy)
+            # never faults — admission/spill POLICY stays with the sim
+            self.backend = JaxBackend(
+                store_mb=2 * cfg.store_cap_mb,
+                host_mb=max(4 * cfg.store_cap_mb, 256.0))
+        else:
+            self.backend = backend
         # `sim` injection: the sharded engine (core/shard.py) substitutes
         # a ShardedLinkSim; default construction is unchanged
         self.sim = sim if sim is not None else \
@@ -156,7 +174,8 @@ class FaaSTube(ChaosMixin, MigrationMixin):
         self.engine = TransferEngine(
             self.sim, self.pf, self.pinned, topo, g2g=cfg.g2g,
             h2g=cfg.h2g, staging=cfg.staging, sched=self.sched,
-            migrator=self.migrator, bg_migration=cfg.bg_migration)
+            migrator=self.migrator, bg_migration=cfg.bg_migration,
+            backend=self.backend)
         self.stats = {"h2g_ms": 0.0, "g2g_ms": 0.0, "alloc_ms": 0.0,
                       "migrations": 0, "reloads": 0, "lost": 0}
         # fault model (core/faults.py drives these): crashed cluster
@@ -342,6 +361,12 @@ class FaaSTube(ChaosMixin, MigrationMixin):
                           func=func)
         self.items[device][data_id] = item
         self._home[data_id] = device
+        if self.backend is not None:
+            # real bytes: materialize the object's payload into the
+            # device's slab store (deterministic synthetic content —
+            # the same oracle the conformance suite regenerates)
+            item.slabs = self.backend.put_object(data_id, device,
+                                                 size_mb=size_mb)
         rec = DataRecord(data_id, node_of(device), device, size_mb,
                          "device", -1)
         self.index.publish(rec)
@@ -403,6 +428,9 @@ class FaaSTube(ChaosMixin, MigrationMixin):
         self._home[data_id] = home
         rec = DataRecord(data_id, node_of(host), host, size_mb, "host", -1)
         self.index.publish(rec)
+        if self.backend is not None:
+            item.slabs = self.backend.put_object(data_id, host,
+                                                 size_mb=size_mb)
         return item
 
     # --------------------------------------------------------------- fetch -
@@ -533,7 +561,8 @@ class FaaSTube(ChaosMixin, MigrationMixin):
         if kind == "h2g" and not src:
             a = host_of(dst)
         plan = self.engine.compile(kind, func, a, b, rec.size_mb,
-                                   slo_ms=slo_ms, infer_ms=infer_ms)
+                                   slo_ms=slo_ms, infer_ms=infer_ms,
+                                   data_id=data_id)
         self.engine.submit(plan, t0, on_done=done,
                            on_fail=failed if on_error is not None
                            else None, handle=handle)
@@ -541,7 +570,7 @@ class FaaSTube(ChaosMixin, MigrationMixin):
 
     def put(self, func: str, src_dev: str, size_mb: float, now: float, *,
             slo_ms: float = 1e9, infer_ms: float = 0.0, on_done=None,
-            on_error=None):
+            on_error=None, data_id: str = ""):
         """Return an output to the host (g2h), SLO-admitted like a fetch.
 
         Executor return copies used to bypass admission entirely and
@@ -564,7 +593,8 @@ class FaaSTube(ChaosMixin, MigrationMixin):
                 on_error(sim, err)
         plan = self.engine.compile("g2h", func, src_dev,
                                    host_of(src_dev), size_mb,
-                                   slo_ms=slo_ms, infer_ms=infer_ms)
+                                   slo_ms=slo_ms, infer_ms=infer_ms,
+                                   data_id=data_id)
         return self.engine.submit(plan, now, on_done=done,
                                   on_fail=failed if on_error is not None
                                   else None)
@@ -610,6 +640,8 @@ class FaaSTube(ChaosMixin, MigrationMixin):
         it = self.items.get(home, {}).pop(data_id, None)
         rec = self.index.global_table.get(data_id)
         self.index.drop(data_id)
+        if self.backend is not None:
+            self.backend.drop_object(data_id)    # every real copy
         if it is None:
             return 0.0
         freed_dev = it.held or home      # RELOADING items hold on their dst

@@ -23,6 +23,9 @@ from repro.core.linksim import alloc_ms
 from repro.errors import PoolCapacityError  # noqa: F401
 
 BLOCK_MB = 2.0
+#: bytes per block/slab — the 2 MB transfer chunk IS the pool block, so
+#: the jax backend's slab arrays are rows of exactly this many uint8s
+SLAB_BYTES = int(BLOCK_MB * 2 ** 20)
 
 
 def blocks_for(size_mb: float) -> int:
@@ -66,11 +69,14 @@ class Buf:
     blocks: int
     t_alloc: float
     last_access: float
+    #: concrete slab rows backing this buffer (track_slabs pools only)
+    slabs: tuple = ()
 
 
 class ElasticPool:
     def __init__(self, device: str, *, capacity_mb: float = 1024.0,
-                 min_pool_mb: float = 300.0, elastic: bool = True):
+                 min_pool_mb: float = 300.0, elastic: bool = True,
+                 track_slabs: bool = False):
         self.device = device
         self.capacity_mb = capacity_mb
         self.min_pool_mb = min_pool_mb
@@ -82,6 +88,12 @@ class ElasticPool:
         self._next = 0
         self.timeline: list[tuple[float, float]] = []   # (t, pool MB)
         self.peak_used_mb = 0.0         # high-water mark of live blocks
+        # slab-identity mode (the jax backend): the pool hands out
+        # concrete row indices into a preallocated (n_slabs, SLAB_BYTES)
+        # array, so a Buf names the physical 2 MB rows its bytes live in
+        self.track_slabs = track_slabs
+        self.n_slabs = int(capacity_mb // BLOCK_MB) if track_slabs else 0
+        self._free_slabs: list[int] = list(range(self.n_slabs - 1, -1, -1))
 
     # ------------------------------------------------------------ sizes ---
     @property
@@ -100,6 +112,18 @@ class ElasticPool:
 
     def _record(self, t):
         self.timeline.append((t, self.pool_mb))
+
+    def grow(self, new_capacity_mb: float):
+        """Raise capacity_mb (never shrinks).  In track_slabs mode the
+        new physical rows join the free list BEHIND the existing ones,
+        so warm slabs keep being reused first."""
+        if new_capacity_mb <= self.capacity_mb:
+            return
+        self.capacity_mb = new_capacity_mb
+        if self.track_slabs:
+            new_n = int(new_capacity_mb // BLOCK_MB)
+            self._free_slabs[:0] = range(new_n - 1, self.n_slabs - 1, -1)
+            self.n_slabs = new_n
 
     # ------------------------------------------------------------- alloc --
     def fits(self, size_mb: float) -> bool:
@@ -130,6 +154,16 @@ class ElasticPool:
         st.last_exec = now
 
         blocks = blocks_for(size_mb)
+        slabs: tuple = ()
+        if self.track_slabs:
+            # physical rows cannot be forced into existence: even a
+            # force=True alloc needs real slabs to land bytes in
+            if len(self._free_slabs) < blocks:
+                raise PoolCapacityError(
+                    f"{self.device}: no free slabs for {size_mb:.0f} MB "
+                    f"({len(self._free_slabs)}/{self.n_slabs} free)",
+                    device=self.device, need_mb=size_mb, cause="capacity")
+            slabs = tuple(self._free_slabs.pop() for _ in range(blocks))
         cost = 0.0
         if self.cached_blocks >= blocks:
             self.cached_blocks -= blocks
@@ -141,7 +175,8 @@ class ElasticPool:
         if self.used_mb > self.peak_used_mb:
             self.peak_used_mb = self.used_mb
         self._next += 1
-        self.bufs[self._next] = Buf(self._next, func, size_mb, blocks, now, now)
+        self.bufs[self._next] = Buf(self._next, func, size_mb, blocks, now,
+                                    now, slabs)
         self._record(now)
         return self._next, cost
 
@@ -154,6 +189,8 @@ class ElasticPool:
             return
         self.used_blocks -= buf.blocks
         self.cached_blocks += buf.blocks
+        if buf.slabs:
+            self._free_slabs.extend(reversed(buf.slabs))
         st = self.stats[buf.func]
         st.live = max(0, st.live - 1)
         if self.elastic:

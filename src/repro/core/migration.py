@@ -66,6 +66,9 @@ class StoredItem:
     #                            (cross-shard staged handoff: a reload
     #                            that starts before the boundary copy
     #                            fully lands pipelines against it)
+    slabs: object = None     # real-payload slab handle (backend="jax"):
+    #                          the _Obj naming the 2 MB rows this item's
+    #                          actual bytes occupy; None on sim-only runs
 
     def __post_init__(self):
         if self.on_host and self.state == DEVICE:
@@ -181,7 +184,8 @@ class MigrationMixin:
             v.host = ""
             self._make_room(device, sim.now)
         plan = self.engine.compile("spill", v.func or "migrate", device,
-                                   v.host, v.size_mb, cls=BACKGROUND)
+                                   v.host, v.size_mb, cls=BACKGROUND,
+                                   data_id=v.data_id)
         self.engine.submit(plan, now, on_done=landed, on_fail=lost)
 
     def _spill_complete(self, v: StoredItem, device: str, t: float):
@@ -195,6 +199,12 @@ class MigrationMixin:
         v.set_state(HOST)
         if rec is not None:
             self.index.relocate(rec, v.host, "host")
+        be = getattr(self.engine, "backend", None)
+        if be is not None:
+            # the real bytes already landed on the host at submit time;
+            # freeing the HBM blocks drops the device-side slab copy too
+            be.drop_object(v.data_id, device)
+            v.slabs = be.store_for(v.host).objects.get(v.data_id)
         self._drain_pending(device, t)
 
     def _demand_reload(self, func: str, item: StoredItem, rec, dst: str,
@@ -254,7 +264,8 @@ class MigrationMixin:
             # the reload blocks a foreground fetch, so it rides that
             # fetch's own foreground admission (not the migration class)
             plan = self.engine.compile("reload", func, src_host, dst,
-                                       rec.size_mb)
+                                       rec.size_mb,
+                                       data_id=item.data_id)
             plan.src_segs, item.avail_segs = item.avail_segs, None
             self.engine.submit(plan, t + cost, on_done=landed,
                                on_fail=lost if fail is not None else None,
@@ -315,5 +326,5 @@ class MigrationMixin:
             self._reload_failed(p, prec, device, err, redispatch=True)
         plan = self.engine.compile("prefetch", p.func or "prefetch",
                                    src_host, device, p.size_mb,
-                                   cls=BACKGROUND)
+                                   cls=BACKGROUND, data_id=p.data_id)
         self.engine.submit(plan, now + cost, on_done=back, on_fail=lost)

@@ -12,7 +12,22 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
+
+# the TPU-specific pallas namespace moved between jax releases
+# (jax.experimental.pallas.tpu -> jax.experimental.pallas.mosaic); try
+# both so importing the kernels package never hard-fails — callers that
+# need the pallas arm check HAS_PALLAS_TPU (ops.gather/scatter fall back
+# to the ref arm when it is False).  Floor: jax>=0.4.37 (interpret mode
+# on CPU); see requirements-dev.txt and tests/_jaxcompat.py.
+try:
+    import jax.experimental.pallas.tpu as pltpu
+except ImportError:  # pragma: no cover - exercised only on newer jax
+    try:
+        import jax.experimental.pallas.mosaic as pltpu
+    except ImportError:
+        pltpu = None
+
+HAS_PALLAS_TPU = pltpu is not None and hasattr(pltpu, "PrefetchScalarGridSpec")
 
 
 def _copy_kernel(idx_ref, src_ref, out_ref):
@@ -21,6 +36,10 @@ def _copy_kernel(idx_ref, src_ref, out_ref):
 
 def gather_chunks(src, idx, *, interpret: bool = True):
     """out[i] = src[idx[i]].  src: (N, C); idx: (M,) int32 -> (M, C)."""
+    if pltpu is None:  # pragma: no cover - guarded by HAS_PALLAS_TPU
+        raise RuntimeError(
+            "pallas TPU namespace unavailable in this jax build; "
+            "use ops.gather(..., use_pallas=False)")
     N, C = src.shape
     M = idx.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -45,6 +64,10 @@ def scatter_chunks(dst, src, idx, *, interpret: bool = True):
     the incoming slab or keeps the existing one (alias-free functional
     update; on real TPU input_output_aliasing makes this in-place).
     """
+    if pltpu is None:  # pragma: no cover - guarded by HAS_PALLAS_TPU
+        raise RuntimeError(
+            "pallas TPU namespace unavailable in this jax build; "
+            "use ops.scatter(..., use_pallas=False)")
     N, C = dst.shape
     M = idx.shape[0]
     # inverse map: for each dst slab, which src row lands there (-1 = keep)

@@ -5,13 +5,17 @@ from functools import partial
 
 import jax
 
-from repro.kernels.chunked_copy.kernel import gather_chunks, scatter_chunks
+from repro.kernels.chunked_copy.kernel import (
+    HAS_PALLAS_TPU,
+    gather_chunks,
+    scatter_chunks,
+)
 from repro.kernels.chunked_copy.ref import gather_chunks_ref, scatter_chunks_ref
 
 
 @partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def gather(src, idx, *, use_pallas: bool = True, interpret: bool | None = None):
-    if not use_pallas:
+    if not use_pallas or not HAS_PALLAS_TPU:
         return gather_chunks_ref(src, idx)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -21,7 +25,7 @@ def gather(src, idx, *, use_pallas: bool = True, interpret: bool | None = None):
 @partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def scatter(dst, src, idx, *, use_pallas: bool = True,
             interpret: bool | None = None):
-    if not use_pallas:
+    if not use_pallas or not HAS_PALLAS_TPU:
         return scatter_chunks_ref(dst, src, idx)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"

@@ -1,0 +1,134 @@
+"""Double-buffered chunked-copy pipeline over pool slabs.
+
+The execution counterpart of LinkSim's batched triggering: a transfer is
+a list of 2 MB slab chunks, grouped into trigger batches of
+``BATCH_CHUNKS``.  The sequential arm models the naive data plane — one
+chunk at a time, ``block_until_ready`` after every chunk — while the
+pipelined arm dispatches a whole batch asynchronously and synchronizes
+only at trigger-batch boundaries, so batch k+1's gather is in flight
+while batch k's scatter drains (ping-pong through XLA's async dispatch
+queue).  Progress callbacks fire exactly at those boundaries with the
+REAL landed chunk count, which is what makes ``on_progress`` and
+partial-consume honest in the jax backend.
+
+Scatters donate the destination pool (``donate_argnums=0``): the update
+is in-place, not a pool-sized copy.  Callers must therefore use the
+RETURNED pool and drop their reference to the argument.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import numpy as np
+
+from repro.kernels.chunked_copy.ops import gather, scatter
+
+#: chunks per trigger batch — mirrors core.linksim.BATCH_CHUNKS (kept
+#: literal here so the kernels package stays importable standalone)
+BATCH_CHUNKS = 5
+
+
+@partial(jax.jit, donate_argnums=0, static_argnames=("use_pallas",))
+def _scatter_into(dst, src, idx, *, use_pallas: bool = False):
+    return scatter(dst, src, idx, use_pallas=use_pallas)
+
+
+def _batches(n: int, batch: int):
+    """Yield (start, stop) chunk ranges, trigger-batch sized."""
+    for s in range(0, n, batch):
+        yield s, min(s + batch, n)
+
+
+def copy_slabs_sequential(src_pool, src_idx, dst_pool, dst_idx, *,
+                          use_pallas: bool = False, on_chunk=None):
+    """Per-chunk synchronous copy: gather -> scatter -> sync, one chunk
+    at a time.  The contrast arm: every chunk pays a full dispatch +
+    host-sync round trip.  Returns the new dst pool."""
+    n = len(src_idx)
+    assert len(dst_idx) == n
+    src_idx = np.asarray(src_idx, np.int32)
+    dst_idx = np.asarray(dst_idx, np.int32)
+    for i in range(n):
+        g = gather(src_pool, src_idx[i:i + 1], use_pallas=use_pallas)
+        dst_pool = _scatter_into(dst_pool, g, dst_idx[i:i + 1],
+                                 use_pallas=use_pallas)
+        dst_pool.block_until_ready()
+        if on_chunk is not None:
+            on_chunk(i + 1)
+    return dst_pool
+
+
+def copy_slabs_pipelined(src_pool, src_idx, dst_pool, dst_idx, *,
+                         batch: int = BATCH_CHUNKS,
+                         use_pallas: bool = False, on_batch=None):
+    """Double-buffered batch copy with boundary-only sync.
+
+    Loop invariant (the ping-pong): at the top of iteration k the gather
+    for batch k is dispatched FIRST, then the sync drains batch k-1's
+    scatter — so two batches are in the XLA queue at any boundary.  The
+    sync happens BEFORE the scatter dispatch because the scatter donates
+    the pool: a donated buffer cannot be block_until_ready'd afterwards.
+
+    ``on_batch(chunks_landed)`` fires at every trigger-batch boundary
+    with the number of chunks actually resident in ``dst_pool``.
+    Returns the new dst pool.
+    """
+    n = len(src_idx)
+    assert len(dst_idx) == n
+    src_idx = np.asarray(src_idx, np.int32)
+    dst_idx = np.asarray(dst_idx, np.int32)
+    landed = 0
+    for s, e in _batches(n, batch):
+        g = gather(src_pool, src_idx[s:e], use_pallas=use_pallas)
+        dst_pool.block_until_ready()          # batch k-1 fully landed
+        if landed and on_batch is not None:
+            on_batch(landed)
+        dst_pool = _scatter_into(dst_pool, g, dst_idx[s:e],
+                                 use_pallas=use_pallas)
+        landed = e
+    dst_pool.block_until_ready()
+    if on_batch is not None and n:
+        on_batch(n)
+    return dst_pool
+
+
+def pool_to_host(src_pool, src_idx, out, *, batch: int = BATCH_CHUNKS,
+                 use_pallas: bool = False, on_batch=None):
+    """Gather slabs device->host, one trigger batch at a time.
+
+    ``out`` is a (n, C) numpy array (ring windows or caller staging);
+    rows are written batch-by-batch.  The device->host materialization
+    (``np.asarray``) is itself the boundary sync.
+    """
+    n = len(src_idx)
+    src_idx = np.asarray(src_idx, np.int32)
+    for s, e in _batches(n, batch):
+        g = gather(src_pool, src_idx[s:e], use_pallas=use_pallas)
+        out[s:e] = np.asarray(g)
+        if on_batch is not None:
+            on_batch(e)
+    return out
+
+
+def host_to_pool(src, dst_pool, dst_idx, *, batch: int = BATCH_CHUNKS,
+                 use_pallas: bool = False, on_batch=None):
+    """Scatter host rows into a device pool, one trigger batch at a
+    time, boundary-only sync (the upload of batch k+1 overlaps batch
+    k's scatter drain).  ``src`` is a (n, C) numpy array.  Returns the
+    new dst pool."""
+    n = len(dst_idx)
+    dst_idx = np.asarray(dst_idx, np.int32)
+    landed = 0
+    for s, e in _batches(n, batch):
+        up = jax.numpy.asarray(src[s:e])
+        dst_pool.block_until_ready()
+        if landed and on_batch is not None:
+            on_batch(landed)
+        dst_pool = _scatter_into(dst_pool, up, dst_idx[s:e],
+                                 use_pallas=use_pallas)
+        landed = e
+    dst_pool.block_until_ready()
+    if on_batch is not None and n:
+        on_batch(n)
+    return dst_pool

@@ -2,11 +2,24 @@
 
 `hypothesis` is a dev-only dependency (requirements-dev.txt).  Importing
 it unconditionally made the whole suite ERROR at collection on machines
-without it; importing this shim instead keeps every non-property test
-running and marks the @given property sweeps as skipped with an
-actionable reason.
+without it; importing this shim keeps every property test RUNNING
+everywhere:
+
+* with hypothesis installed, ``given``/``settings``/``st`` are the real
+  thing — full shrinking search;
+* without it, ``given`` degrades to a deterministic seeded sweep: each
+  strategy knows how to draw from a ``random.Random`` keyed on the test
+  name, and the test body runs ``DEGRADED_EXAMPLES`` times with those
+  draws.  Same coverage shape (one failing draw fails the test and its
+  kwargs print in the assertion), no search/shrinking — but no silent
+  skips either.
+
+Only the strategy combinators the suite actually uses are implemented
+(``sampled_from``, ``integers``, ``booleans``, ``floats``, ``lists``);
+an unimplemented one
+raises at import so the gap is loud, not skipped.
 """
-import pytest
+import random
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -14,21 +27,65 @@ try:
 except ModuleNotFoundError:                       # degraded mode
     HAVE_HYPOTHESIS = False
 
+    #: draws per property test in the degraded deterministic sweep
+    DEGRADED_EXAMPLES = 8
+
     def settings(*_a, **_k):
         return lambda f: f
 
-    def given(*_a, **_k):
-        def deco(_f):
-            return pytest.mark.skip(
-                reason="hypothesis not installed "
-                       "(pip install -r requirements-dev.txt)")(_f)
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def given(*_a, **kw):
+        assert not _a, "degraded @given supports keyword strategies only"
+
+        def deco(f):
+            # NOT functools.wraps: copying __wrapped__ would make pytest
+            # read the original signature and demand fixtures for the
+            # strategy kwargs — the sweep runner takes no parameters
+            def run():
+                rng = random.Random(f.__qualname__)
+                for _ in range(DEGRADED_EXAMPLES):
+                    drawn = {k: s.draw(rng) for k, s in kw.items()}
+                    try:
+                        f(**drawn)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"degraded property sweep failed on "
+                            f"{drawn}") from e
+            run.__name__ = f.__name__
+            run.__doc__ = f.__doc__
+            return run
         return deco
 
     class _Strategies:
-        """Stands in for `strategies`: any strategy call returns None,
-        which is fine because the @given stub never draws from it."""
+        @staticmethod
+        def sampled_from(xs):
+            xs = list(xs)
+            return _Strategy(lambda rng: rng.choice(xs))
 
-        def __getattr__(self, _name):
-            return lambda *a, **k: None
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: rng.randint(lo, hi))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.choice([False, True]))
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elem.draw(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+        def __getattr__(self, name):
+            raise NotImplementedError(
+                f"degraded _hyp shim has no strategy {name!r} — add it "
+                f"or install hypothesis (requirements-dev.txt)")
 
     st = _Strategies()

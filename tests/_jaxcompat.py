@@ -1,13 +1,31 @@
-"""Gate for tests that need the modern jax sharding API.
+"""Gates for tests with jax-version-dependent surface.
 
-The model/training stack targets jax >= 0.6 (`jax.set_mesh`,
-`jax.sharding.AxisType`).  On containers with an older jax the simulator
-/ benchmark stack (repro.core, repro.serving.executor) is fully
-functional, so those tests run everywhere; model-stack tests skip with
-an actionable reason instead of erroring.
+Two independent floors:
+
+* the model/training stack targets jax >= 0.6 (`jax.set_mesh`,
+  `jax.sharding.AxisType`) — ``requires_modern_jax``;
+* the chunked-copy pallas kernels need the ``pallas.tpu`` scalar-
+  prefetch namespace, which MOVED between jax versions (``.tpu`` ->
+  ``.mosaic``); ``KERNEL_JAX_FLOOR`` documents the oldest jax the
+  kernels package supports (0.4.x with either namespace present), and
+  ``HAS_PALLAS_TPU`` is the runtime truth — the import guard in
+  ``repro.kernels.chunked_copy.kernel`` probes both spellings and the
+  jnp reference arm (``use_pallas=False``) covers every older jax.
+
+On containers failing either floor the simulator / benchmark stack
+(repro.core, repro.serving.executor) is fully functional, so those
+tests run everywhere; gated tests skip with an actionable reason
+instead of erroring.
 """
 import jax
 import pytest
+
+from repro.kernels.chunked_copy import HAS_PALLAS_TPU  # noqa: F401
+
+#: oldest jax the kernels package targets — the pallas arm needs the
+#: tpu/mosaic namespace (probed at import, see HAS_PALLAS_TPU); the
+#: reference arm runs on anything that can jit
+KERNEL_JAX_FLOOR = "0.4.30"
 
 MODERN_JAX = hasattr(jax, "set_mesh") and hasattr(jax.sharding, "AxisType")
 
@@ -15,3 +33,9 @@ requires_modern_jax = pytest.mark.skipif(
     not MODERN_JAX,
     reason=f"installed jax {jax.__version__} lacks set_mesh/AxisType; "
            "model-stack tests require jax>=0.6")
+
+requires_pallas_tpu = pytest.mark.skipif(
+    not HAS_PALLAS_TPU,
+    reason=f"installed jax {jax.__version__} has no pallas tpu/mosaic "
+           f"namespace (kernel floor {KERNEL_JAX_FLOOR}); only the "
+           "use_pallas=False reference arm is available")
